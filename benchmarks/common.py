@@ -1,0 +1,18 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows — ``derived`` is
+the benchmark's headline metric (throughput, completion slots, Θ, ...).
+"""
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

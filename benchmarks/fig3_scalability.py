@@ -1,0 +1,28 @@
+"""Figure 3: scalability spectrum for MRLS with R=36, f=1.
+
+Region boundaries (P[D* <= k] = 1/2 thresholds, Appendix A) and the
+expected average distance A(S) curve.  Paper landmarks: first boundary
+~2K endpoints (D 2->4), next ~30K (D* 4->5), 100M endpoints at D=6.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import dstar_thresholds, mrls_design, mrls_expected_A
+from benchmarks.common import emit, timed
+
+
+def main(full: bool = True):
+    print("# fig3: D* thresholds and expected A for MRLS(R=36, f=1)")
+    th, us = timed(lambda: dstar_thresholds(36, 1.0, k_max=8))
+    for k, s in th.items():
+        emit(f"fig3.threshold_Dstar<={k}", us / len(th), f"S={s:.4g}")
+    for S in (1_000, 2_000, 11_052, 30_000, 104_976, 1_000_000,
+              10_000_000, 100_000_000):
+        (n1, n2, u, d) = mrls_design(S, 36, 1.0)
+        a, us = timed(lambda: mrls_expected_A(n1, n2, u, 36))
+        emit(f"fig3.A@S={S}", us, f"A={a:.3f}|Theta={2.0 / a:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Figure 4: radix required to connect S endpoints per topology family.
+
+For each target S: the smallest radix R such that the topology (at its
+normalization — MRLS at f=1, FT non-blocking, OFT full) connects >= S
+endpoints.
+"""
+import math
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import mrls_design, mrls_expected_A, prob_dstar_leq
+from benchmarks.common import emit, timed
+
+
+def ft_radix(S: int, h: int) -> int:
+    # S = 2 (R/2)^(h+1)
+    return 2 * math.ceil((S / 2) ** (1 / (h + 1)))
+
+
+def oft_radix(S: int) -> int:
+    # S = 2(q^2+q+1)(q+1); find the smallest prime-power-ish q
+    q = 2
+    while 2 * (q * q + q + 1) * (q + 1) < S:
+        q += 1
+    return 2 * (q + 1)
+
+
+def mrls_radix(S: int, d_star_max: int = 7) -> int:
+    """Smallest even R with f=1 whose MRLS reaches S at D* <= d_star_max."""
+    for R in range(6, 256, 2):
+        n1, n2, u, d = mrls_design(S, R, 1.0)
+        if prob_dstar_leq(n1, n2, u, R, d_star_max) > 0.5:
+            return R
+    return -1
+
+
+def main(full: bool = True):
+    print("# fig4: radix required per topology to reach S endpoints")
+    for S in (1_000, 10_000, 100_000, 1_000_000, 10_000_000):
+        r, us = timed(lambda: mrls_radix(S))
+        emit(f"fig4.mrls@S={S}", us, f"R={r}")
+        emit(f"fig4.ft3@S={S}", 0.1, f"R={ft_radix(S, 2)}")
+        emit(f"fig4.ft4@S={S}", 0.1, f"R={ft_radix(S, 3)}")
+        emit(f"fig4.oft@S={S}", 0.1, f"R={oft_radix(S)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Figure 5: indirect networks at the 11K-endpoint scale.
+
+OFT vs cost-matched MRLS (Polarized AND KSP) vs FT vs cost-1.4/2.0 MRLS.
+Scaled default: radix 12, ~400 endpoints, same cost ratios.  ``--full``
+builds the paper's exact 11K networks.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import mrls, oft, fat_tree
+from benchmarks.bench_sim import run_scenario
+
+
+def main(full: bool = False):
+    print("# fig5: 11K-endpoint-scale indirect networks "
+          f"({'FULL paper size' if full else 'scaled radix-12 family'})")
+    if full:
+        scen = [
+            ("fig5.oft_q17.pol", oft(17), "polarized", 6),
+            ("fig5.mrls_u18.pol", mrls(614, 18, 18, seed=1), "polarized", 6),
+            ("fig5.mrls_u18.ksp", mrls(614, 18, 18, seed=1), "ksp", 4),
+            ("fig5.mrls_u21.pol", mrls(744, 21, 15, seed=1), "polarized", 6),
+            ("fig5.mrls_u24.pol", mrls(972, 24, 12, seed=1), "polarized", 6),
+            ("fig5.ft_h2.min", fat_tree(36, 2), "minimal_adaptive", 4),
+        ]
+        warm, measure, rounds, ranks = 300, 300, 24, 8192
+    else:
+        scen = [
+            ("fig5.oft_q5.pol", oft(5), "polarized", 6),
+            ("fig5.mrls_u6.pol", mrls(62, 6, 6, seed=1), "polarized", 8),
+            ("fig5.mrls_u6.ksp", mrls(62, 6, 6, seed=1), "ksp", 6),
+            ("fig5.mrls_u7.pol", mrls(84, 7, 5, seed=1), "polarized", 8),
+            ("fig5.mrls_u8.pol", mrls(108, 8, 4, seed=1), "polarized", 8),
+            ("fig5.ft_h2.min", fat_tree(12, 2), "minimal_adaptive", 4),
+        ]
+        warm, measure, rounds, ranks = 250, 250, 12, 256
+    for name, topo, policy, hops in scen:
+        run_scenario(name, topo, policy, hops, warm, measure, rounds, ranks)
+
+
+if __name__ == "__main__":
+    main("--full" in sys.argv)

@@ -1,0 +1,70 @@
+"""Roofline aggregation: read results/dryrun/*.json into the §Roofline
+table (per arch x shape x mesh: the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio, roofline fraction)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh=None, fused=False):
+    recs = []
+    if not os.path.isdir(DIR):
+        return recs
+    for name in sorted(os.listdir(DIR)):
+        if not name.endswith(".json") or "=" in name:
+            continue            # skip override variants
+        if ("_fused" in name) != fused:
+            continue
+        rec = json.load(open(os.path.join(DIR, name)))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def table(mesh="16x16", fused=False) -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | useful | roofline_frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh, fused=fused):
+        if rec.get("status") == "skip":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skip: {rec['reason'][:40]} | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{rec['useful_flops_ratio']:.3f} | "
+            f"{rec['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def main(full: bool = True):
+    print("# roofline: per (arch, shape) on the single-pod mesh")
+    for rec in load_records("16x16"):
+        if rec.get("status") == "ok":
+            r = rec["roofline"]
+            emit(f"roofline.{rec['arch']}.{rec['shape']}",
+                 rec.get("compile_s", 0) * 1e6,
+                 f"dom={r['dominant']}|bound={r['bound_s']:.4f}s|"
+                 f"frac={rec['roofline_fraction']:.4f}")
+        elif rec.get("status") == "skip":
+            emit(f"roofline.{rec['arch']}.{rec['shape']}", 0, "skip")
+        else:
+            emit(f"roofline.{rec['arch']}.{rec['shape']}", 0, "ERROR")
+
+
+if __name__ == "__main__":
+    main()

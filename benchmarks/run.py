@@ -1,0 +1,26 @@
+"""Benchmark harness entry point — one section per paper artifact.
+
+Each row: ``name,us_per_call,derived``.  Default runs the scaled simulator
+families (CPU-tractable); ``--full`` uses exact paper sizes for the
+simulator figures (hours — used once for EXPERIMENTS.md §Repro).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from benchmarks import (table2, fig3_scalability, fig4_radix, fig5_11k,
+                            fig6_100k, fig7_dragonfly, roofline)
+    table2.main(full)
+    fig3_scalability.main(full)
+    fig4_radix.main(full)
+    fig5_11k.main(full)
+    fig6_100k.main(full)
+    fig7_dragonfly.main(full)
+    roofline.main(full)
+
+
+if __name__ == '__main__':
+    main()

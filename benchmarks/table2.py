@@ -1,0 +1,44 @@
+"""Table 2: parameters of the evaluated topologies (exact, full size).
+
+Rebuilds every row of the paper's Table 2 and reports Cost_links,
+Cost_switches, diameter and Θ next to the paper's values.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (mrls, oft, fat_tree, dragonfly, dragonfly_plus,
+                        exact_metrics, mrls_design)
+from benchmarks.common import emit, timed
+
+# (builder, paper: cost_links, cost_switches, D, theta)
+ROWS = [
+    ("MRLS(36,11052)u18", lambda: mrls(614, 18, 18, seed=1), 1.0, 0.083, 4, 0.748),
+    ("MRLS(36,11160)u21", lambda: mrls(744, 21, 15, seed=1), 1.4, 0.106, 4, 1.029),
+    ("MRLS(36,11664)u24", lambda: mrls(972, 24, 12, seed=1), 2.0, 0.139, 4, 1.420),
+    ("MRLS(36,104976)u18", lambda: mrls(5832, 18, 18, seed=1), 1.0, 0.083, 4, 0.527),
+    ("MRLS(36,104976)u24", lambda: mrls(8748, 24, 12, seed=1), 2.0, 0.139, 4, 1.048),
+    ("MRLS(36,104976)u27", lambda: mrls(11664, 27, 9, seed=1), 3.0, 0.194, 4, 1.561),
+    ("MRLS(32,16640)u19", lambda: mrls(1280, 19, 13, seed=1), 1.462, 0.122, 4, 0.900),
+    ("OFT(36,11052)", lambda: oft(17), 1.0, 0.083, 2, 1.0),
+    ("FT(36,11664)", lambda: fat_tree(36, 2), 2.0, 0.139, 4, 1.0),
+    ("FT(36,104976)50%", lambda: fat_tree(36, 3, a1=18), 3.0, 0.222, 6, 1.0),
+    ("DF+(32,16640)", lambda: dragonfly_plus(65, 16, 16, 16, 16), 1.5, 0.127, 3, 1.0),
+    ("DF(32,16512)", lambda: dragonfly(16, 8, 8), 1.5, 0.125, 3, 1.0),
+]
+
+
+def main(full: bool = True):
+    print("# table2: name,us_per_call,"
+          "S|C_links(got/paper)|C_sw(got/paper)|D(got/paper)|Theta(got/paper)")
+    for name, build, cl, cs, D, th in ROWS:
+        (topo, us) = timed(build)
+        m = exact_metrics(topo)
+        derived = (f"S={m.S}|C_l={m.cost_links:.3f}/{cl}|"
+                   f"C_s={m.cost_switches:.3f}/{cs}|D={m.D}/{D}|"
+                   f"Θ={m.theta:.3f}/{th}")
+        emit(f"table2.{name}", us, derived)
+
+
+if __name__ == "__main__":
+    main()

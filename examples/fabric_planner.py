@@ -1,0 +1,53 @@
+"""The paper's technique applied to THIS framework's own traffic.
+
+Reads the multi-pod dry-run records (cross-pod collective byte volumes per
+train step), models three candidate DCN fabrics with the paper's machinery
+(MRLS / Fat-Tree / Dragonfly at matched cost), and reports per-fabric
+communication time + the recommended pod-axis strategy.
+
+This is the punchline of the reproduction: the MRLS paper's +50% All2All /
++100% vs Dragonfly advantage, measured in OUR framework's collective mix.
+
+Run:  PYTHONPATH=src python examples/fabric_planner.py
+(needs results/dryrun/*.json from `python -m repro.launch.dryrun --all`)
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.fabric.planner import plan_pod_axis, build_fabric, collective_time_s
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+records = []
+for path in sorted(glob.glob(os.path.join(DIR, "*_train_4k_2x16x16.json"))):
+    rec = json.load(open(path))
+    if rec.get("status") == "ok":
+        records.append(rec)
+
+if not records:
+    print("no multi-pod dry-run records found — run the dry-run first")
+    sys.exit(0)
+
+print(f"{'arch':26s} {'comm bytes/dev':>14s} {'MRLS(s)':>9s} {'FT(s)':>9s} "
+      f"{'DF(s)':>9s} {'best':>10s} {'compress':>9s}")
+for rec in records:
+    plan = plan_pod_axis(rec, n_pod_endpoints=512,
+                         compute_s=rec["roofline"]["compute_s"])
+    coll = sum(rec["per_device"]["collective_bytes"].values())
+    est = plan.est_comm_s
+    print(f"{rec['arch']:26s} {coll:14.3e} {est['mrls']:9.4f} "
+          f"{est['fat_tree']:9.4f} {est['dragonfly']:9.4f} "
+          f"{plan.recommended_fabric:>10s} "
+          f"{'EF-int8' if plan.compress_gradients else 'no':>9s}")
+
+print()
+print("fabric models at 512 endpoints (per-NIC 400 Gb/s):")
+for kind in ("mrls", "fat_tree", "dragonfly"):
+    fab = build_fabric(kind, 512)
+    t_a2a = collective_time_s(fab, "all2all", 1e9)
+    print(f"  {kind:10s} Θ={fab.theta:5.3f} cost={fab.cost_links:.2f} "
+          f"links/EP   1GB all2all: {t_a2a * 1000:.1f} ms")

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Full production path: config -> mesh/sharder -> synthetic pipeline with
+prefetch -> sharded AdamW -> fault-tolerant runner with async checkpoints.
+The stream has deterministic Markov structure, so loss falls well below
+ln(V) — convergence is asserted at the end.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import build_training
+from repro.models.model import ModelConfig
+from repro.optim.adamw import AdamWConfig, warmup_cosine
+from repro.parallel.sharding import Sharder
+
+# ~100M params: 12L x d768 x ffn 2048, vocab 32768
+CFG_100M = ModelConfig(
+    name="demo-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab=32768, act="swiglu", rope_theta=10_000.0,
+    q_block=128, kv_block=128,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="results/train_lm_ckpt")
+    args = ap.parse_args()
+
+    print(f"demo-100m: {CFG_100M.param_count() / 1e6:.1f}M params")
+    mesh = make_test_mesh()
+    sh = Sharder(mesh)
+    opt = AdamWConfig(lr=1e-3,
+                      schedule=warmup_cosine(10, args.steps))
+    data = SyntheticLM(DataConfig(CFG_100M.vocab, args.seq, args.batch), sh)
+
+    with jax.set_mesh(mesh):
+        state, runner, ckpt = build_training(
+            CFG_100M, sh, opt, args.ckpt_dir, data)
+        t0 = time.time()
+        state, step, hist = runner.run(state, 0, args.steps)
+    dt = time.time() - t0
+
+    losses = [h["loss"] for h in hist]
+    print(f"steps={step}  wall={dt:.0f}s  ({dt / step:.2f}s/step)")
+    print(f"loss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(ln V = {np.log(CFG_100M.vocab):.3f})")
+    print(f"checkpoints: {ckpt.all_steps()}")
+    drop = losses[0] - np.mean(losses[-10:])
+    assert drop > 0.15, f"did not converge (drop={drop:.3f})"
+    print(f"OK — loss fell by {drop:.2f} nats")
+
+
+if __name__ == "__main__":
+    main()

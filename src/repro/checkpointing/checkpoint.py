@@ -1,0 +1,151 @@
+"""Sharded, atomic, elastic checkpointing.
+
+* Atomic: written to ``<dir>/tmp.<step>`` then renamed to ``<dir>/step_N`` —
+  a crash mid-save never corrupts the latest checkpoint.
+* Elastic: ``restore`` re-places arrays onto the *current* mesh's shardings
+  (the new mesh may be smaller/larger than the one that saved — node-failure
+  recovery and elastic scaling reuse the same path).
+* Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes in a background thread, overlapping I/O with the next train steps.
+* Bounded retention: ``keep`` newest checkpoints survive.
+
+Storage: one ``.npz`` per checkpoint with flattened path keys (portable,
+no pickle).  At real production scale this would be a per-host shard file;
+the layout keeps that switch local to ``_write``/``_read``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy .npz cannot represent ml_dtypes (bfloat16, fp8): store such arrays
+# as raw uint views and record the dtype in meta for lossless restore.
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _to_npz(a: np.ndarray):
+    for name, (dt, view) in _VIEW_DTYPES.items():
+        if a.dtype == dt:
+            return a.view(view), name
+    return a, None
+
+
+def _from_npz(a: np.ndarray, name):
+    if name:
+        return a.view(_VIEW_DTYPES[name][0])
+    return a
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: dict):
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def _write(self, step: int, host_tree: dict, meta: dict):
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host_tree)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            import shutil
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ #
+    def _snapshot(self, tree, meta):
+        host, dtypes = {}, {}
+        for k, v in _flatten(tree).items():
+            arr, dname = _to_npz(np.asarray(v))
+            host[k] = arr
+            if dname:
+                dtypes[k] = dname
+        return host, {"dtypes": dtypes, **meta}
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        host, m = self._snapshot(tree, {"step": step, **(meta or {})})
+        self._write(step, host, m)
+
+    def save_async(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        host, m = self._snapshot(tree, {"step": step, **(meta or {})})
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, m), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> tuple[Any, dict]:
+        """Load into the structure of ``template``; re-place onto
+        ``shardings`` (same tree) if given — elastic across meshes."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta_peek = json.load(f)
+        dtypes = meta_peek.get("dtypes", {})
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: _from_npz(data[k], dtypes.get(k)) for k in data.files}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return tree, meta

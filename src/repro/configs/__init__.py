@@ -1,0 +1,71 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig, plus shape cells.
+
+Also provides ``reduced(cfg)`` — a small same-family config for CPU smoke
+tests (few layers, narrow width, tiny vocab, few experts), exercised by
+``tests/test_archs.py``; the FULL configs are only lowered via the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import SHAPES, ShapeCell, supports
+from ..models.model import ModelConfig
+from ..models.moe import MoECfg
+
+from . import (command_r_plus_104b, deepseek_v3_671b, falcon_mamba_7b,
+               hymba_1_5b, llama_3_2_vision_90b, nemotron_4_15b,
+               qwen3_1_7b, qwen3_moe_235b_a22b, seamless_m4t_medium,
+               starcoder2_15b)
+
+REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (nemotron_4_15b, qwen3_1_7b, starcoder2_15b,
+              command_r_plus_104b, hymba_1_5b, qwen3_moe_235b_a22b,
+              deepseek_v3_671b, llama_3_2_vision_90b, seamless_m4t_medium,
+              falcon_mamba_7b)
+}
+
+ARCHS = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests."""
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        n_layers=4 if not cfg.hybrid else 4,
+        d_model=128,
+        n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512,
+        dense_d_ff=256,
+        q_block=64, kv_block=64, ssm_chunk=16,
+        n_ctx_tokens=16 if cfg.n_ctx_tokens else 0,
+        enc_layers=2 if cfg.enc_dec else 0,
+        sliding_window=32 if cfg.sliding_window else None,
+        full_attn_layers=(0, 3) if cfg.full_attn_layers else (),
+        cross_every=cfg.cross_every and 2,
+        dense_layers=min(cfg.dense_layers, 1),
+    )
+    if cfg.hybrid:
+        kw.update(n_heads=5, n_kv_heads=1, head_dim=16, tp_heads=False)
+    if cfg.moe is not None:
+        kw["moe"] = MoECfg(n_experts=8, top_k=2,
+                           d_expert=64, n_shared=cfg.moe.n_shared,
+                           router_scale_bias=cfg.moe.router_scale_bias)
+    if cfg.mla is not None:
+        from ..models.model import MLACfg
+        kw["mla"] = MLACfg(q_lora=64, kv_lora=32, nope_dim=32, rope_dim=16,
+                           v_dim=32)
+        kw.update(n_heads=4, n_kv_heads=4, head_dim=32)
+    if cfg.family == "vlm":
+        kw["n_layers"] = 4          # 2 super-blocks of (1 self + 1 cross)
+    return dataclasses.replace(cfg, **kw)
+
+
+__all__ = ["REGISTRY", "ARCHS", "get_config", "reduced", "SHAPES",
+           "ShapeCell", "supports"]

@@ -1,0 +1,9 @@
+"""nemotron-4-15b [dense]: 32L d6144 48H (GQA kv=8) ff24576 vocab 256000.
+GQA + squared-ReLU MLP + RoPE [arXiv:2402.16819]."""
+from ..models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b", family="dense",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab=256000, act="sq_relu", rope_theta=10_000.0,
+)

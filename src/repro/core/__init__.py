@@ -1,0 +1,20 @@
+"""The paper's primary contribution: MRLS topologies, multipass/Polarized
+routing, analytic scalability machinery, and collective workloads."""
+from .topology import (
+    Topology, mrls, fat_tree, oft, dragonfly, dragonfly_plus, rfc,
+)
+from .routing import (
+    bfs_distances, RoutingTables, build_tables, polarized_port_mask,
+    route_packet_host, find_corners, POLICIES,
+)
+from .analytics import (
+    Metrics, exact_metrics, theta, cost_links, cost_switches,
+    mrls_distance_distribution, mrls_expected_A, mrls_expected_A_star,
+    prob_dstar_leq, dstar_thresholds, mrls_design,
+)
+from .collectives import (
+    all2all_rounds, rabenseifner_phases,
+    all2all_lower_bound_slots, allreduce_lower_bound_slots,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,218 @@
+"""Routing for randomly-wired indirect networks (Section 4.3 of the paper).
+
+Host-side (numpy): BFS distance tables and a reference step-by-step router
+used by tests and analytics.  Device-side (jnp): vectorized Polarized port
+scoring used by the cycle-level simulator.
+
+Polarized routing (Camarero et al. [28], adapted to indirect networks here):
+every candidate next-hop link is classified by the tuple
+``(d(n,s)-d(c,s), d(n,t)-d(c,t))`` into Forward(+1,-1) / Expansion(+1,+1) /
+Contraction(-1,-1) / Backtrack(-1,+1).  Forward is always allowed; Expansion
+only while ``d(c,s) < d(c,t)``; Contraction only once ``d(c,s) >= d(c,t)``;
+Backtrack never.  Theorem 4.2 bounds route length by ``2 D* - 2``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = [
+    "bfs_distances",
+    "RoutingTables",
+    "build_tables",
+    "polarized_port_mask",
+    "route_packet_host",
+    "POLICIES",
+]
+
+POLICIES = ("polarized", "minimal_adaptive", "ksp", "ugal", "valiant")
+
+
+# ---------------------------------------------------------------------- #
+# distances
+# ---------------------------------------------------------------------- #
+def bfs_distances(topo: Topology, sources: np.ndarray) -> np.ndarray:
+    """[len(sources), N] int16 hop distances (-1 = unreachable).
+
+    Per-source frontier BFS with vectorized neighbor expansion; fast enough
+    for the paper's 100K-endpoint networks (~6K sources x ~9K switches).
+    The TPU-resident alternative is tropical matrix powering — see
+    ``repro.kernels.minplus`` (the Pallas hot-spot kernel).
+    """
+    nbrs = topo.nbrs
+    n = topo.n_switches
+    sources = np.asarray(sources)
+    out = np.full((len(sources), n), -1, np.int16)
+    for row, s in enumerate(sources):
+        dist = out[row]
+        visited = np.zeros(n, bool)
+        frontier = np.asarray([s], dtype=np.int64)
+        visited[s] = True
+        d = 0
+        while frontier.size:
+            dist[frontier] = d
+            cand = nbrs[frontier].ravel()
+            cand = cand[cand >= 0]
+            cand = np.unique(cand)
+            frontier = cand[~visited[cand]]
+            visited[frontier] = True
+            d += 1
+    return out
+
+
+@dataclasses.dataclass
+class RoutingTables:
+    """Precomputed routing state shared by host router and simulator."""
+
+    topo: Topology
+    dist_leaf: np.ndarray          # [N1, N] distances from each leaf
+    leaf_rank: np.ndarray          # [N] rank among leaves or -1
+    dist_full: Optional[np.ndarray] = None   # [N, N] (small nets / direct nets)
+
+    @property
+    def diameter_leaf(self) -> int:
+        leaves = self.topo.leaf_ids
+        return int(self.dist_leaf[:, leaves].max())
+
+    @property
+    def diameter_star(self) -> int:
+        if self.dist_full is not None:
+            return int(self.dist_full.max())
+        return int(self.dist_leaf.max())       # max over (leaf, any-switch)
+
+    @property
+    def avg_distance_leaf(self) -> float:
+        leaves = self.topo.leaf_ids
+        d = self.dist_leaf[:, leaves].astype(np.float64)
+        n1 = len(leaves)
+        return float(d.sum() / (n1 * (n1 - 1)))
+
+
+def build_tables(topo: Topology, full: bool = False) -> RoutingTables:
+    dist_leaf = bfs_distances(topo, topo.leaf_ids)
+    dist_full = bfs_distances(topo, np.arange(topo.n_switches)) if full else None
+    return RoutingTables(topo, dist_leaf, topo.leaf_rank(), dist_full)
+
+
+# ---------------------------------------------------------------------- #
+# Polarized port classification (numpy + jnp twins)
+# ---------------------------------------------------------------------- #
+def polarized_port_mask(
+    d_cs, d_ct, d_ns, d_nt, hops, max_hops, valid,
+):
+    """Vectorized Polarized filter.  Works with numpy or jnp arrays.
+
+    Args are broadcastable: ``d_cs, d_ct, hops`` per packet, ``d_ns, d_nt,
+    valid`` per (packet, port).  Returns ``(allowed, is_deroute)`` masks.
+    A deroute (Expansion/Contraction) additionally requires that the hop
+    budget still admits finishing: ``hops + 1 + d_nt <= max_hops``.
+    """
+    import numpy as xp  # numpy semantics; jnp arrays pass through fine
+    fwd = (d_ns == d_cs + 1) & (d_nt == d_ct - 1)
+    exp_ = (d_ns == d_cs + 1) & (d_nt == d_ct + 1) & (d_cs < d_ct)
+    con = (d_ns == d_cs - 1) & (d_nt == d_ct - 1) & (d_cs >= d_ct)
+    budget_ok = (hops + 1 + d_nt) <= max_hops
+    deroute = (exp_ | con)
+    allowed = valid & (fwd | (deroute & budget_ok))
+    del xp
+    return allowed, deroute & valid
+
+
+# ---------------------------------------------------------------------- #
+# host-side reference router (tests, analytics, corner detection)
+# ---------------------------------------------------------------------- #
+def route_packet_host(
+    tables: RoutingTables,
+    src_leaf: int,
+    dst_leaf: int,
+    policy: str = "polarized",
+    max_hops: Optional[int] = None,
+    occupancy: Optional[np.ndarray] = None,     # [N, P] synthetic load
+    rng: Optional[np.random.Generator] = None,
+    deroute_penalty: float = 10.0,
+) -> list[int]:
+    """Route one packet switch-by-switch; returns the list of visited
+    switches (including src and dst).  Raises RuntimeError on a *corner*
+    (no allowed port — Section 4.3.2) or hop-budget exhaustion."""
+    topo, dist = tables.topo, tables.dist_leaf
+    lr = tables.leaf_rank
+    s, t = lr[src_leaf], lr[dst_leaf]
+    assert s >= 0 and t >= 0, "src/dst must be leaves"
+    if max_hops is None:
+        max_hops = 2 * tables.diameter_star - 2 if policy == "polarized" \
+            else tables.diameter_leaf
+    rng = rng or np.random.default_rng(0)
+    occ = occupancy if occupancy is not None else np.zeros_like(topo.nbrs, np.float64)
+
+    path = [src_leaf]
+    cur, hops = src_leaf, 0
+    mid = None
+    if policy == "valiant" or policy == "ugal":
+        mid = int(rng.choice(topo.leaf_ids))
+        if policy == "ugal":       # UGAL-L: pick VAL only if MIN looks congested
+            min_ports = np.nonzero(
+                (topo.nbrs[cur] >= 0)
+                & (dist[t, topo.nbrs[cur]] == dist[t, cur] - 1))[0]
+            val_ports = np.nonzero(
+                (topo.nbrs[cur] >= 0)
+                & (dist[lr[mid], topo.nbrs[cur]] == dist[lr[mid], cur] - 1))[0]
+            q_min = occ[cur, min_ports].min() if min_ports.size else np.inf
+            q_val = occ[cur, val_ports].min() if val_ports.size else np.inf
+            d_min, d_val = dist[t, cur], dist[lr[mid], cur] + dist[t, mid]
+            if q_min * d_min <= q_val * d_val:
+                mid = None        # go minimal
+    target_rank = t if mid is None else lr[mid]
+
+    while cur != dst_leaf:
+        if hops >= max_hops:
+            raise RuntimeError(f"hop budget exhausted at {cur} ({policy})")
+        nb = topo.nbrs[cur]
+        valid = nb >= 0
+        nb_safe = np.where(valid, nb, 0)
+        if policy == "polarized":
+            allowed, deroute = polarized_port_mask(
+                dist[s, cur], dist[t, cur],
+                dist[s, nb_safe], dist[t, nb_safe],
+                hops, max_hops, valid)
+            if not allowed.any():
+                raise RuntimeError(f"corner at switch {cur} for pair ({src_leaf},{dst_leaf})")
+            score = occ[cur] + deroute_penalty * deroute + rng.uniform(0, 1e-6, nb.shape)
+            score = np.where(allowed, score, np.inf)
+            port = int(np.argmin(score))
+        else:
+            # minimal (adaptive / random) toward current target
+            min_mask = valid & (dist[target_rank, nb_safe] == dist[target_rank, cur] - 1)
+            if not min_mask.any():
+                raise RuntimeError(f"no minimal port at {cur}")
+            ports = np.nonzero(min_mask)[0]
+            if policy == "ksp":
+                port = int(rng.choice(ports))      # randomized minimal-DAG walk
+            else:                                  # minimal_adaptive / ugal / valiant
+                port = int(ports[np.argmin(occ[cur, ports])])
+        cur = int(topo.nbrs[cur, port])
+        hops += 1
+        path.append(cur)
+        if mid is not None and cur == mid:
+            mid = None
+            target_rank = t
+    return path
+
+
+def find_corners(tables: RoutingTables, n_samples: int = 2000, seed: int = 0) -> int:
+    """Sample (s, t) leaf pairs and count Polarized routing failures
+    (corners).  The paper re-rolls the MRLS if any corner exists; for random
+    topologies the probability is negligible (Section 4.3.2)."""
+    rng = np.random.default_rng(seed)
+    leaves = tables.topo.leaf_ids
+    corners = 0
+    for _ in range(n_samples):
+        a, b = rng.choice(leaves, 2, replace=False)
+        try:
+            route_packet_host(tables, int(a), int(b), "polarized", rng=rng)
+        except RuntimeError:
+            corners += 1
+    return corners

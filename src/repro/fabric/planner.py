@@ -1,0 +1,114 @@
+"""Fabric planner: the paper's contribution applied to THIS framework.
+
+On a multi-pod system the ``pod`` mesh axis crosses the datacenter (DCN)
+fabric — exactly the extreme-scale leaf-spine network the paper studies.
+The planner:
+
+1. models candidate DCN fabrics with the paper's machinery
+   (``repro.core``): MRLS at a chosen thickness f, Fat-Tree, Dragonfly;
+2. takes the *measured* cross-pod collective byte volumes from a dry-run
+   record (``repro.launch.dryrun`` JSON);
+3. estimates per-step cross-pod communication time on each fabric from the
+   capacity limit Θ (Eq. 1) and per-pattern efficiency factors calibrated
+   with the packet simulator (All2All-class traffic: MRLS ≈ 1.5x FT
+   throughput at 100K endpoints, ≈ 2x DF — Section 6);
+4. recommends the pod-axis strategy (plain DP sync vs EF-int8 compressed
+   sync — ``repro.optim.compression``) and reports the fabric ranking.
+
+This is deliberately a *model*, not a simulation of every step: the
+simulator calibrates pattern efficiencies once, the planner applies them to
+arbitrary byte volumes (the same separation the paper draws between Θ and
+simulated L).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from ..core import analytics, topology
+from ..core.routing import build_tables
+
+# pattern efficiency = achieved fraction of min(1, Θ) under the pattern,
+# calibrated with the CAMINOS-equivalent simulator (benchmarks/fig5/6/7;
+# see EXPERIMENTS.md §Repro).  all2all ~ uniform; allreduce (ring/halving
+# over nearby ranks) is locality-friendly, which favors FT.
+PATTERN_EFF = {
+    "mrls": {"all2all": 0.85, "allreduce": 0.75, "uniform": 0.85},
+    "fat_tree": {"all2all": 0.60, "allreduce": 0.90, "uniform": 0.90},
+    "dragonfly": {"all2all": 0.45, "allreduce": 0.75, "uniform": 0.75},
+}
+
+
+@dataclasses.dataclass
+class FabricSpec:
+    name: str               # mrls | fat_tree | dragonfly
+    theta: float            # capacity limit (Eq. 1)
+    cost_links: float       # links per endpoint (Eq. 2)
+    link_gbps: float = 400.0
+
+
+def build_fabric(kind: str, n_endpoints: int, radix: int = 64,
+                 f: float = 2.0, link_gbps: float = 400.0) -> FabricSpec:
+    """Instantiate a fabric model at ``n_endpoints`` NICs (pods x hosts)."""
+    if kind == "mrls":
+        n1, n2, u, d = analytics.mrls_design(n_endpoints, radix, f)
+        A = analytics.mrls_expected_A(n1, n2, u, radix)
+        theta = analytics.theta(u * n1, n1 * d, A)
+        return FabricSpec("mrls", theta, u / d, link_gbps)
+    if kind == "fat_tree":
+        # non-blocking FT sized for n_endpoints (h levels as needed)
+        k = radix // 2
+        h = max(1, math.ceil(math.log(n_endpoints / (2 * k), k)))
+        return FabricSpec("fat_tree", 1.0, float(h), link_gbps)
+    if kind == "dragonfly":
+        return FabricSpec("dragonfly", 1.0, 1.5, link_gbps)
+    raise ValueError(kind)
+
+
+def collective_time_s(fabric: FabricSpec, pattern: str,
+                      bytes_per_endpoint: float) -> float:
+    """Time to move ``bytes_per_endpoint`` under ``pattern``.
+
+    endpoint injection rate = link_gbps; the fabric sustains
+    eff * min(1, Θ) of it under the pattern.
+    """
+    eff = PATTERN_EFF[fabric.name][pattern]
+    rate = fabric.link_gbps * 1e9 / 8 * eff * min(1.0, fabric.theta)
+    return bytes_per_endpoint / rate
+
+
+@dataclasses.dataclass
+class PodAxisPlan:
+    fabric_ranking: list          # [(name, step_comm_s, cost_links)]
+    recommended_fabric: str
+    compress_gradients: bool
+    est_comm_s: dict
+
+
+def plan_pod_axis(dryrun_record: dict, n_pod_endpoints: int = 512,
+                  compute_s: Optional[float] = None,
+                  link_gbps: float = 400.0) -> PodAxisPlan:
+    """Given a dry-run JSON record, rank fabrics for its cross-pod traffic.
+
+    Cross-pod traffic classes: the all-to-all bytes (MoE expert parallel)
+    follow the All2All pattern; all-reduce/reduce-scatter bytes (DP/FSDP
+    sync) follow the Allreduce pattern.
+    """
+    coll = dryrun_record["per_device"]["collective_bytes"]
+    a2a = coll.get("all-to-all", 0.0)
+    ar = (coll.get("all-reduce", 0.0) + coll.get("reduce-scatter", 0.0)
+          + coll.get("all-gather", 0.0))
+    ranking = []
+    est = {}
+    for kind in ("mrls", "fat_tree", "dragonfly"):
+        fab = build_fabric(kind, n_pod_endpoints, link_gbps=link_gbps)
+        t = (collective_time_s(fab, "all2all", a2a)
+             + collective_time_s(fab, "allreduce", ar))
+        ranking.append((kind, t, fab.cost_links))
+        est[kind] = t
+    ranking.sort(key=lambda x: x[1])
+    best = ranking[0][0]
+    # compress when cross-pod comm would not hide behind compute
+    compress = compute_s is not None and est[best] > 0.5 * compute_s
+    return PodAxisPlan(ranking, best, compress, est)

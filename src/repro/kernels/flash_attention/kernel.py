@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash attention (fwd) with GQA and causal block skip.
+
+Grid ``(B, H, nq, nk)`` with the KV axis minor-most (sequential on TPU).
+Running (m, l) statistics live in SMEM-adjacent VMEM scratch; the f32
+accumulator is VMEM scratch written back as bf16 at the last KV step.
+Causal masking skips fully-masked KV tiles with ``pl.when`` — the tile never
+leaves HBM on a real TPU since the index map still addresses it, but no
+compute or accumulation happens (the XLA-level baseline cannot skip at all;
+see EXPERIMENTS.md §Perf).  The GQA index map points ``g`` consecutive query
+heads at the same KV head, so KV tiles are fetched once per KV head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  nk: int, seq_q: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: KV tile strictly above the diagonal does nothing
+    q0 = qi * bq + (seq_kv - seq_q)
+    k0 = ki * bk
+    live = (not causal) or (k0 <= q0 + bq - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                                   # [bq, D]
+        k = k_ref[0, 0]                                   # [bk, D]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: bool = False):
+    """q: [B,Sq,H,D]; k,v: [B,Skv,Hkv,D] -> [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(D)
+
+    qt = q.transpose(0, 2, 1, 3)        # [B,H,Sq,D]
+    kt = k.transpose(0, 2, 1, 3)        # [B,Hkv,Skv,D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk, seq_q=Sq, seq_kv=Skv),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running sum l
+            pltpu.VMEM((bq, D), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,12 @@
+"""Public op: flash attention with CPU-interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def flash_attention_op(q, k, v, causal: bool = True, **kw):
+    kw.setdefault("interpret", jax.default_backend() == "cpu")
+    return flash_attention(q, k, v, causal=causal, **kw)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: tropical (min-plus) matmul.
+
+Hardware adaptation (DESIGN.md): min-plus has no MXU form — it is a VPU
+reduction.  The kernel tiles C into ``bm x bn`` VMEM blocks, iterates the K
+dimension as the minor-most (sequential) grid axis, and inside each step
+reduces a ``bk``-deep slab with an unrolled VPU ``minimum`` loop over
+broadcast row+col sums.  Block sizes are multiples of (8, 128) to keep VREG
+lanes full; the running min lives in the output block across K steps
+(revisiting pattern, legal because the minor grid axis is sequential on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 1e9
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, k_chunk: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, INF)
+
+    a = a_ref[...]                      # [bm, bk]
+    b = b_ref[...]                      # [bk, bn]
+    acc = o_ref[...]
+    # VPU reduction: process k_chunk rows of b at a time
+    for k0 in range(0, bk, k_chunk):
+        blk = jnp.min(a[:, k0:k0 + k_chunk, None]
+                      + b[None, k0:k0 + k_chunk, :], axis=1)
+        acc = jnp.minimum(acc, blk)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk",
+                                             "interpret"))
+def minplus(a, b, bm: int = 128, bn: int = 128, bk: int = 128,
+            k_chunk: int = 8, interpret: bool = False):
+    """Tropical matmul C = A (min,+) B with BlockSpec VMEM tiling."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    a = jnp.pad(a, ((0, pm), (0, pk)), constant_values=INF)
+    b = jnp.pad(b, ((0, pk), (0, pn)), constant_values=INF)
+    M, K = a.shape
+    _, N = b.shape
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_minplus_kernel, bk=bk, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

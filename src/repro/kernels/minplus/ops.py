@@ -1,0 +1,32 @@
+"""Public ops: device-resident all-pairs distances via min-plus powering."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import minplus
+from .ref import adjacency_matrix, minplus_ref, INF
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def minplus_op(a, b, **kw):
+    kw.setdefault("interpret", _auto_interpret())
+    return minplus(a, b, **kw)
+
+
+def all_pairs_distances(nbrs, n_iters: int | None = None, **kw):
+    """Hop distances between all switch pairs by repeated squaring.
+
+    ``nbrs``: padded neighbor array [N, P] (as in ``core.Topology``).
+    ``n_iters``: number of squarings (default: enough for diameter <= 2^n).
+    Returns float32 [N, N] (INF = unreachable).
+    """
+    adj = adjacency_matrix(nbrs)
+    it = n_iters if n_iters is not None else 5      # diameter <= 32
+    d = adj
+    for _ in range(it):
+        d = minplus_op(d, d, **kw)
+    return d

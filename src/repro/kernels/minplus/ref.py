@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for tropical (min-plus) matrix multiplication.
+
+``C[i, j] = min_k (A[i, k] + B[k, j])`` — the inner product of the
+(min, +) semiring.  Powering the (hop-weighted) adjacency matrix under this
+product yields all-pairs shortest-path distances: the TPU-native form of the
+paper's distance-table computation (Section 4.3 needs d(x, leaf) tables for
+Polarized routing; the CPU path is frontier BFS in ``repro.core.routing``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = 1e9
+
+
+def minplus_ref(a, b):
+    """a: [M, K]; b: [K, N] -> [M, N] under (min, +)."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def adjacency_matrix(nbrs, inf: float = INF):
+    """Padded neighbor array [N, P] -> dense weighted adjacency [N, N]."""
+    import numpy as np
+    n = nbrs.shape[0]
+    m = np.full((n, n), inf, np.float32)
+    np.fill_diagonal(m, 0.0)
+    for i in range(n):
+        for j in nbrs[i]:
+            if j >= 0:
+                m[i, j] = 1.0
+    return jnp.asarray(m)
+
+
+def all_pairs_ref(adj, max_pow: int = 16):
+    """Repeated min-plus squaring to the shortest-path fixpoint."""
+    d = adj
+    for _ in range(max_pow):
+        nd = minplus_ref(d, d)
+        if bool(jnp.all(nd == d)):
+            break
+        d = nd
+    return d

@@ -1,0 +1,11 @@
+"""Public op: selective scan with CPU-interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import selective_scan
+
+
+def selective_scan_op(u, dt, A, Bc, Cc, h0, **kw):
+    kw.setdefault("interpret", jax.default_backend() == "cpu")
+    return selective_scan(u, dt, A, Bc, Cc, h0, **kw)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: Mamba-1 selective-scan chunk step (sequential)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, A, Bc, Cc, h0):
+    """Sequential recurrence.
+
+    u, dt: [T, Di]; A: [Di, N]; Bc, Cc: [T, N]; h0: [Di, N].
+    Returns (y [T, Di] f32, h_T [Di, N] f32).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) outer B_t
+    y_t = h_t . C_t
+    """
+    u = u.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[:, None] * A)
+        h = da * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y = (h * c_t[None, :]).sum(-1)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), (u, dt, Bc, Cc))
+    return ys, h

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# TPU-intent numerics in the lowered HLO (bf16 dots, f32 accumulation);
+# nothing in the dry-run is ever executed.
+os.environ.setdefault("REPRO_STRICT_BF16", "1")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves on 512 placeholder devices that the distribution
+config is coherent (shardings consistent, collectives legal, memory fits)
+and extracts the roofline terms:
+
+  compute   = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16 / chip)
+  memory    = HLO_bytes / HBM_bw                (819 GB/s / chip)
+  collective= collective_bytes / link_bw        (~50 GB/s ICI link / chip)
+
+(all per-device — the analyzed module is the per-device SPMD module; see
+``hlo_stats`` for the loop-trip-count-aware accounting).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all [--out-dir results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+
+
+def active_param_count(cfg) -> int:
+    """6*N*D counts only routed-active expert params for MoE."""
+    import jax
+    from repro.models.model import build_specs
+    from repro.models.common import is_spec
+    import numpy as np
+    specs = build_specs(cfg)
+    total = 0
+    paths = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)[0]
+    for path, spec in paths:
+        n = int(np.prod(spec.shape))
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if cfg.moe is not None and "/moe/w" in "/" + keys:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+FUSED_SCOPES = ("flash_tile", "ssm_chunk")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             mesh=None, overrides: dict | None = None,
+             fused: bool = False) -> dict:
+    import jax
+    from repro.configs import get_config, SHAPES, supports
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as ST
+    from repro.launch import hlo_stats
+    from repro.parallel.sharding import Sharder
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    ok, why = supports(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    from repro.parallel.sharding import ShardingRules
+    sh = Sharder(mesh, ShardingRules.for_mesh(
+        mesh, sequence_parallel=cfg.seq_parallel))
+    n_chips = mesh.size
+    t0 = time.time()
+
+    if cell.kind == "train":
+        opt = ST.default_opt(cfg)
+        structs = ST.input_structs(cfg, cell, sh, opt)
+        step = ST.make_train_step(cfg, sh, opt)
+        args = (structs["params"], structs["opt_state"], structs["batch"])
+    elif cell.kind == "prefill":
+        structs = ST.input_structs(cfg, cell, sh)
+        step = ST.make_prefill_step(cfg, sh)
+        args = (structs["params"], structs["batch"])
+    else:
+        structs = ST.input_structs(cfg, cell, sh)
+        step = ST.make_decode_step(cfg, sh)
+        args = (structs["params"], structs["cache"], structs["tokens"],
+                structs["pos"])
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    stats = hlo_stats.analyze(compiled.as_text(),
+                              FUSED_SCOPES if fused else ())
+
+    flops = stats["flops"]                     # per device
+    byts = stats["bytes"]
+    coll = stats["collective_total"]
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    tokens = cell.batch * (cell.seq if cell.kind != "decode" else 1)
+    n_active = active_param_count(cfg)
+    model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+    hlo_global = flops * n_chips
+    rec.update(
+        status="ok",
+        kind=cell.kind,
+        n_chips=n_chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        per_device={
+            "flops": flops,
+            "bytes": byts,
+            "collective_bytes": stats["collective_bytes"],
+            "collective_count": stats["collective_count"],
+        },
+        xla_cost_analysis={"flops_1iter": ca.get("flops"),
+                           "bytes_1iter": ca.get("bytes accessed")},
+        memory_analysis={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        roofline={**{k: round(v, 6) for k, v in terms.items()},
+                  "dominant": dominant,
+                  "bound_s": round(max(terms.values()), 6)},
+        model_flops=model_flops,
+        n_active_params=n_active,
+        hlo_flops_global=hlo_global,
+        useful_flops_ratio=round(model_flops / max(hlo_global, 1), 4),
+        roofline_fraction=round(
+            (model_flops / PEAK_FLOPS / n_chips)
+            / max(max(terms.values()), 1e-12), 4),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--override", default="",
+                    help="comma k=v model-config overrides (perf experiments)")
+    ap.add_argument("--fused", action="store_true",
+                    help="Pallas-kernel cost model: flash/ssm tile interiors "
+                         "are VMEM-resident (EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override.split(","):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            overrides[k] = v
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def one(arch, shape, multipod):
+        tag = f"{arch}_{shape}_{'2x16x16' if multipod else '16x16'}"
+        if overrides:
+            tag += "_" + "-".join(f"{k}={v}" for k, v in overrides.items())
+        if args.fused:
+            tag += "_fused"
+        path = os.path.join(args.out_dir, tag + ".json")
+        try:
+            rec = run_cell(arch, shape, multipod, overrides=overrides or None,
+                           fused=args.fused)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "mesh": "2x16x16" if multipod else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(json.dumps({k: rec.get(k) for k in
+                          ("arch", "shape", "mesh", "status", "compile_s",
+                           "roofline", "useful_flops_ratio",
+                           "roofline_fraction", "error")}, default=float))
+
+    if args.all:
+        from repro.configs import ARCHS, SHAPES
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    one(arch, shape, mp)
+    else:
+        one(args.arch, args.shape, args.multipod)
+
+
+if __name__ == "__main__":
+    main()

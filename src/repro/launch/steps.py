@@ -1,0 +1,96 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``make_train_step`` returns the full production step (fwd + bwd + clip +
+AdamW update); ``make_prefill_step`` / ``make_decode_step`` are the serving
+entry points.  ``input_structs`` builds the ShapeDtypeStruct stand-ins (with
+attached shardings — no allocation) used by the dry-run and by tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ShapeCell
+from ..models import model as M
+from ..models.common import abstract_params
+from ..optim.adamw import AdamWConfig, adamw_update, opt_specs
+from ..parallel.sharding import Sharder
+
+
+def default_opt(cfg: M.ModelConfig) -> AdamWConfig:
+    """bf16 moments for >=100B params (fits 16GB/chip v5e), else f32."""
+    big = cfg.param_count() > 100e9
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def make_train_step(cfg: M.ModelConfig, sh: Sharder, opt: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, batch, cfg, sh))(params)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: M.ModelConfig, sh: Sharder):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, sh)
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig, sh: Sharder):
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(params, cache, tokens, pos, cfg, sh)
+    return decode_step
+
+
+# ---------------------------------------------------------------------- #
+# abstract inputs
+# ---------------------------------------------------------------------- #
+def _tok_struct(sh: Sharder, batch, seq):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                sharding=_safe(sh, (batch, seq), ("dp", None)))
+
+
+def _safe(sh: Sharder, shape, axes):
+    return sh.sharding(axes, shape)
+
+
+def input_structs(cfg: M.ModelConfig, cell: ShapeCell, sh: Sharder,
+                  opt: Optional[AdamWConfig] = None) -> dict:
+    """Abstract inputs for the cell's step function.
+
+    train  -> {params, opt_state, batch}
+    prefill-> {params, batch}
+    decode -> {params, cache, tokens, pos}
+    """
+    specs = M.build_specs(cfg)
+    params = abstract_params(specs, sh)
+    B, S = cell.batch, cell.seq
+    out = {"params": params}
+
+    def ctx_struct():
+        return jax.ShapeDtypeStruct(
+            (B, cfg.n_ctx_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=_safe(sh, (B, cfg.n_ctx_tokens, cfg.d_model),
+                           ("dp", None, None)))
+
+    if cell.kind == "train":
+        out["opt_state"] = abstract_params(opt_specs(specs, opt), sh)
+        batch = {"tokens": _tok_struct(sh, B, S),
+                 "labels": _tok_struct(sh, B, S)}
+        if cfg.n_ctx_tokens:
+            batch["ctx"] = ctx_struct()
+        out["batch"] = batch
+    elif cell.kind == "prefill":
+        batch = {"tokens": _tok_struct(sh, B, S)}
+        if cfg.n_ctx_tokens:
+            batch["ctx"] = ctx_struct()
+        out["batch"] = batch
+    else:  # decode
+        out["cache"] = M.cache_struct(cfg, B, S, sh)
+        out["tokens"] = _tok_struct(sh, B, 1)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

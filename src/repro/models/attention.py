@@ -1,0 +1,287 @@
+"""Attention: GQA (RoPE, qk-norm, sliding window) and MLA (DeepSeek).
+
+The training/prefill core is a chunked online-softmax (flash-style) attention
+written in pure jnp so it lowers everywhere (the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU fast path and is validated
+against the same reference).  Chunking bounds the live score tensor to
+``[B, q_block, H, kv_block]`` — required for the 32K prefill cells.
+
+Decode (one new token against a cached context) uses a single fused pass; for
+MLA the *absorbed* form is used so the latent cache is attended directly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, apply_rope, fdot, rmsnorm, rope_freqs
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------- #
+# chunked online-softmax core
+# ---------------------------------------------------------------------- #
+def attention_core(q, k, v, *, causal: bool, window: Optional[int] = None,
+                   q_block: int = 512, kv_block: int = 1024,
+                   q_offset: int = 0):
+    """q: [B,Sq,H,D]; k,v: [B,Skv,Hkv,D] with H % Hkv == 0.
+
+    Returns [B,Sq,H,D].  Scans over q blocks; within each q block scans over
+    kv blocks with running (max, sum, acc) — O(q_block*kv_block) live scores.
+    ``window`` (sliding-window attention) statically restricts the kv range
+    per q block to ``window + q_block`` positions.
+    """
+    B, Sq, H, D = q.shape
+    Skv_real, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    q_block = min(q_block, Sq)
+    pq = (-Sq) % q_block
+    if pq:                        # pad queries to a block multiple
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    Sq_pad = Sq + pq
+    nq = Sq_pad // q_block
+
+    use_window = window is not None and Skv_real > window + 2 * q_block
+    if use_window:
+        kv_span = min(window + q_block, Skv_real)
+        nkv = 1
+        kv_block = kv_span
+        Skv = Skv_real
+    else:
+        kv_block = min(kv_block, Skv_real)
+        pk = (-Skv_real) % kv_block
+        if pk:                    # pad keys/values; masked by kpos < Skv_real
+            k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        Skv = Skv_real + pk
+        nkv = Skv // kv_block
+
+    qr = q.reshape(B, nq, q_block, H, D).transpose(1, 0, 2, 3, 4)
+    kv_limit = Skv_real
+
+    def q_step(_, qb_and_idx):
+        with jax.named_scope("flash_tile"):
+            return _q_step_inner(qb_and_idx)
+
+    def _q_step_inner(qb_and_idx):
+        qb, qi = qb_and_idx                        # [B,qb,H,D], scalar idx
+        q0 = qi * q_block + q_offset               # global start of q block
+
+        if use_window:
+            start = jnp.clip(q0 + q_block - kv_span, 0, Skv - kv_span)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            starts = start[None]
+            kbs, vbs = kb[None], vb[None]
+        else:
+            starts = jnp.arange(nkv, dtype=jnp.int32) * kv_block
+            kbs = k.reshape(B, nkv, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+            vbs = v.reshape(B, nkv, kv_block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            # interior of the flash-attention tile: VMEM-resident when the
+            # Pallas kernel (repro.kernels.flash_attention) replaces this
+            # reference; the analyzer's fused mode keys off this scope name.
+            kb_, vb_, k0 = kv                      # [B,kb,Hkv,D], start
+            kb_r = jnp.repeat(kb_, g, axis=2)      # [B,kb,H,D]
+            vb_r = jnp.repeat(vb_, g, axis=2)
+            s = fdot("bqhd,bkhd->bhqk", qb, kb_r) * scale
+            qpos = q0 + jnp.arange(q_block)[:, None]
+            kpos = k0 + jnp.arange(kb_.shape[1])[None, :]
+            mask = kpos < kv_limit            # kv padding
+            if causal:
+                mask = mask & (kpos <= qpos)
+            if window is not None:
+                mask = mask & (kpos > qpos - (window + 1))
+            s = jnp.where(mask[None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + fdot(
+                "bhqk,bkhd->bhqd", p.astype(vb_r.dtype), vb_r)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_block), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kbs, vbs, starts))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,qb,H,D]
+
+    # checkpoint each q block: backward recomputes the kv scan per block
+    # (flash-style) instead of saving f32 softmax tiles for every
+    # (q_block, kv_block) pair — otherwise the saved p-stacks are
+    # O(Sq*Skv) f32 and dominate HBM (verified in the dry-run HLO).
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qr, jnp.arange(nq, dtype=jnp.int32)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq_pad, H, Dv)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None):
+    """q: [B,1,H,D]; caches: [B,S,Hkv,D] (ring-buffered if window).
+
+    Masks cache entries beyond ``pos``; with a window cache the whole ring is
+    valid once pos >= window.  Softmax in f32.
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k_cache, g, axis=2)
+    vr = jnp.repeat(v_cache, g, axis=2)
+    s = fdot("bqhd,bkhd->bhk", q, kr) * scale
+    idx = jnp.arange(S)
+    valid = idx <= pos if window is None else (idx <= pos) | (pos >= S)
+    s = jnp.where(valid[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = fdot("bhk,bkhd->bhd", p.astype(vr.dtype), vr)
+    return out[:, None].astype(q.dtype).reshape(B, 1, H, Dv)
+
+
+# ---------------------------------------------------------------------- #
+# GQA block
+# ---------------------------------------------------------------------- #
+def gqa_specs(cfg) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # TP over heads where divisible; else over head_dim (e.g. hymba's 25H);
+    # attn_replicated turns attention TP off entirely (small-attention archs
+    # where score psums would dominate the collective term).
+    if cfg.attn_replicated:
+        h_ax = d_ax = None
+    else:
+        h_ax, d_ax = ("tp", None) if cfg.heads_shardable else (None, "tp")
+    out = {
+        "wq": ParamSpec((d, H, hd), ("fsdp", h_ax, d_ax)),
+        "wk": ParamSpec((d, Hkv, hd), ("fsdp", h_ax, d_ax)),
+        "wv": ParamSpec((d, Hkv, hd), ("fsdp", h_ax, d_ax)),
+        "wo": ParamSpec((H, hd, d), (h_ax, d_ax, "fsdp"),
+                        scale=0.02 / math.sqrt(2 * cfg.total_layers)),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((hd,), (None,), "float32", "ones")
+        out["k_norm"] = ParamSpec((hd,), (None,), "float32", "ones")
+    return out
+
+
+def gqa_qkv(p, x, cfg, positions):
+    """Project + rope; returns q [B,S,H,D], k, v [B,S,Hkv,D]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.bfloat16)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=jnp.bfloat16)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=jnp.bfloat16)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta:
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+        cos, sin = cos[:, :, None], sin[:, :, None]    # [B,S,1,hd/2]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                      preferred_element_type=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------- #
+# MLA block (DeepSeek-V3)
+# ---------------------------------------------------------------------- #
+def mla_specs(cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "wq_a": ParamSpec((d, m.q_lora), ("fsdp", None)),
+        "q_norm": ParamSpec((m.q_lora,), (None,), "float32", "ones"),
+        "wq_b": ParamSpec((m.q_lora, H, m.nope_dim + m.rope_dim),
+                          (None, "tp", None)),
+        "wkv_a": ParamSpec((d, m.kv_lora + m.rope_dim), ("fsdp", None)),
+        "kv_norm": ParamSpec((m.kv_lora,), (None,), "float32", "ones"),
+        "wk_b": ParamSpec((m.kv_lora, H, m.nope_dim), (None, "tp", None)),
+        "wv_b": ParamSpec((m.kv_lora, H, m.v_dim), (None, "tp", None)),
+        "wo": ParamSpec((H, m.v_dim, d), ("tp", None, "fsdp"),
+                        scale=0.02 / math.sqrt(2 * cfg.total_layers)),
+    }
+
+
+def mla_latent(p, x, cfg, positions):
+    """Shared path: compressed kv latent + rope key (single shared head)."""
+    m = cfg.mla
+    ckv = jnp.einsum("bsd,dc->bsc", x, p["wkv_a"],
+                     preferred_element_type=jnp.bfloat16)
+    c_kv, k_rope = ckv[..., : m.kv_lora], ckv[..., m.kv_lora:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(m.rope_dim, cfg.rope_theta, positions)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_queries(p, x, cfg, positions):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dq->bsq", x, p["wq_a"],
+                    preferred_element_type=jnp.bfloat16)
+    q = jnp.einsum("bsq,qhk->bshk", rmsnorm(cq, p["q_norm"], cfg.norm_eps),
+                   p["wq_b"], preferred_element_type=jnp.bfloat16)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    cos, sin = rope_freqs(m.rope_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos[:, :, None], sin[:, :, None])
+    return q_nope, q_rope
+
+
+def mla_attention_train(p, x, cfg, positions, q_block=512, kv_block=1024):
+    """Expanded form: materialize per-head K/V from the latent (train/prefill)."""
+    m = cfg.mla
+    c_kv, k_rope = mla_latent(p, x, cfg, positions)
+    q_nope, q_rope = mla_queries(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["wk_b"],
+                        preferred_element_type=jnp.bfloat16)
+    v = jnp.einsum("bsc,chk->bshk", c_kv, p["wv_b"],
+                   preferred_element_type=jnp.bfloat16)
+    H = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None],
+                                (*k_rope.shape[:2], H, m.rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], -1)
+    o = attention_core(q, k, v, causal=True, q_block=q_block,
+                       kv_block=kv_block)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                      preferred_element_type=jnp.bfloat16), (c_kv, k_rope)
+
+
+def mla_attention_decode(p, x, cfg, c_kv_cache, k_rope_cache, pos):
+    """Absorbed form: attend the latent cache directly (decode)."""
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    c_kv_new, k_rope_new = mla_latent(p, x, cfg, positions)
+    c_kv_cache = jax.lax.dynamic_update_slice_in_dim(c_kv_cache, c_kv_new, pos, 1)
+    k_rope_cache = jax.lax.dynamic_update_slice_in_dim(k_rope_cache, k_rope_new, pos, 1)
+    q_nope, q_rope = mla_queries(p, x, cfg, positions)
+    # absorb W_k into the query
+    q_c = fdot("bshk,chk->bshc", q_nope, p["wk_b"])
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    s = (fdot("bshc,btc->bhst", q_c.astype(jnp.bfloat16), c_kv_cache)
+         + fdot("bshk,btk->bhst", q_rope, k_rope_cache)) * scale
+    idx = jnp.arange(c_kv_cache.shape[1])
+    s = jnp.where((idx <= pos)[None, None, None], s, NEG)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = fdot("bhst,btc->bshc", pattn.astype(jnp.bfloat16), c_kv_cache)
+    o = jnp.einsum("bshc,chk->bshk", ctx.astype(jnp.bfloat16), p["wv_b"],
+                   preferred_element_type=jnp.bfloat16)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=jnp.bfloat16)
+    return out, c_kv_cache, k_rope_cache

@@ -1,0 +1,169 @@
+"""Shared model machinery: parameter specs, init, norms, RoPE, activations.
+
+Parameters are described by :class:`ParamSpec` trees (shape, dtype, logical
+sharding axes, init recipe).  The same tree drives:
+  * real initialization (smoke tests, the train example),
+  * abstract ``ShapeDtypeStruct`` construction with attached shardings
+    (the multi-pod dry-run — no allocation),
+  * optimizer-state and checkpoint layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import Sharder
+
+DType = jnp.dtype
+
+# bf16 x bf16 -> f32 dots: the TPU target wants MXU bf16 inputs with f32
+# accumulation (preferred_element_type).  XLA:CPU's DotThunk rejects that
+# combination at runtime for some contraction patterns, so CPU execution
+# (smoke tests, examples) upcasts instead.  The dry-run sets
+# REPRO_STRICT_BF16=1 to keep the TPU-intent HLO (it never executes).
+import os as _os
+_STRICT = _os.environ.get("REPRO_STRICT_BF16", "0") == "1"
+
+
+def fdot(subscripts, a, b):
+    """einsum with f32 accumulation (TPU-intent bf16 MXU dot)."""
+    if _STRICT or jax.default_backend() != "cpu":
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical sharding names per dim (see Sharder)
+    dtype: str = "bfloat16"
+    init: str = "normal"        # normal | zeros | ones | mamba_a | dt_bias
+    scale: float = 0.02
+
+    def struct(self, sh: Optional[Sharder] = None) -> jax.ShapeDtypeStruct:
+        if sh is None:
+            return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+        return jax.ShapeDtypeStruct(
+            self.shape, jnp.dtype(self.dtype),
+            sharding=sh.sharding(self.axes, self.shape))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "mamba_a":      # A_log = log(1..N) broadcast over channels
+        n = spec.shape[-1]
+        a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(a, spec.shape).astype(dt)
+    if spec.init == "dt_bias":      # softplus^-1 of uniform(1e-3, 1e-1)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dt)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dt)
+
+
+def init_params(specs, key, sh: Optional[Sharder] = None):
+    """Initialize a ParamSpec tree; deterministic per-leaf keys by path."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        v = _init_one(leaf, jax.random.fold_in(key, i))
+        if sh is not None:
+            v = jax.device_put(v, sh.sharding(leaf.axes, leaf.shape))
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, sh: Optional[Sharder] = None):
+    return jax.tree.map(lambda s: s.struct(sh), specs, is_leaf=is_spec)
+
+
+def param_shardings(specs, sh: Sharder):
+    return jax.tree.map(lambda s: sh.sharding(s.axes, s.shape), specs,
+                        is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------- #
+# numerics
+# ---------------------------------------------------------------------- #
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: [...]; returns cos/sin of shape [..., head_dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., head_dim]; cos/sin broadcastable to [..., head_dim/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "swiglu" or name == "geglu":
+        raise ValueError("gated activations are handled in the MLP itself")
+    return {
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "silu": jax.nn.silu,
+        "sq_relu": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+GATED_ACTS = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+
+
+def mlp_specs(d_model: int, d_ff: int, act: str, scale_out: float) -> dict:
+    if act in GATED_ACTS:
+        return {
+            "wi": ParamSpec((d_model, 2, d_ff), ("fsdp", None, "tp")),
+            "wo": ParamSpec((d_ff, d_model), ("tp", "fsdp"), scale=scale_out),
+        }
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("fsdp", "tp")),
+        "wo": ParamSpec((d_ff, d_model), ("tp", "fsdp"), scale=scale_out),
+    }
+
+
+def mlp_apply(p: dict, x, act: str):
+    if act in GATED_ACTS:
+        gu = jnp.einsum("bsd,dgf->bsgf", x, p["wi"],
+                        preferred_element_type=jnp.bfloat16)
+        h = GATED_ACTS[act](gu[:, :, 0].astype(jnp.float32)).astype(x.dtype) \
+            * gu[:, :, 1]
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"],
+                       preferred_element_type=jnp.bfloat16)
+        h = activation(act)(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"],
+                      preferred_element_type=jnp.bfloat16)
+
+
+def pad_vocab(v: int, multiple: int = 128) -> int:
+    return ((v + multiple - 1) // multiple) * multiple

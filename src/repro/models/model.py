@@ -1,0 +1,622 @@
+"""Unified model assembly for all assigned architectures.
+
+A model is a *block program*: an ordered list of homogeneous groups, each
+``lax.scan``-ned over stacked layer parameters (keeps the HLO small enough to
+compile 80 dry-run cells) — heterogeneous stacks (DeepSeek dense->MoE,
+Hymba's 3 full-attention layers, Llama-vision's cross-attn interleave) are
+split into scanned groups / unrolled singletons.
+
+Three entry points per model:
+  * ``train_logits / loss``      — causal LM training (or enc-dec).
+  * ``prefill``                  — build the decode cache from a prompt.
+  * ``decode_step``              — one token against the cache (serve_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamSpec, abstract_params, init_params, mlp_apply,
+                     mlp_specs, pad_vocab, rmsnorm)
+from . import attention as attn
+from .moe import MoECfg, moe_apply, moe_specs
+from .ssm import ssm_decode, ssm_prefill, ssm_specs
+from ..parallel.sharding import Sharder
+
+
+# ---------------------------------------------------------------------- #
+# configuration
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|hybrid|ssm|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tp_heads: bool = True           # TP over heads (False -> over head_dim)
+    # MoE
+    moe: Optional[MoECfg] = None
+    dense_layers: int = 0           # leading dense layers (DeepSeek: 3)
+    dense_d_ff: int = 0
+    # MLA
+    mla: Optional[MLACfg] = None
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    hybrid: bool = False            # parallel attn + ssm (Hymba)
+    full_attn_layers: tuple = ()    # hybrid: these layer idxs use full attn
+    sliding_window: Optional[int] = None
+    # cross-attention context (vision tokens / audio frames)
+    cross_every: int = 0            # vlm: 1 cross layer per `cross_every`
+    n_ctx_tokens: int = 0
+    ctx_seq_for: dict = dataclasses.field(default_factory=dict)
+    # encoder-decoder
+    enc_dec: bool = False
+    enc_layers: int = 0
+    # execution knobs
+    remat: str = "full"             # full | dots | none
+    seq_parallel: bool = False      # Megatron-style SP on the residual stream
+    attn_replicated: bool = False   # no TP in attention (tiny-head archs)
+    q_block: int = 512
+    kv_block: int = 1024
+    ssm_chunk: int = 256
+
+    @property
+    def total_layers(self) -> int:
+        return self.n_layers + self.enc_layers
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def heads_shardable(self) -> bool:
+        return self.tp_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM / hybrid-with-window)."""
+        return self.ssm_state > 0
+
+    def param_count(self) -> int:
+        from .common import count_params
+        return count_params(build_specs(self))
+
+
+# ---------------------------------------------------------------------- #
+# block program
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kind: str          # dense|moe|mla_dense|mla_moe|mamba|hybrid|hybrid_full
+    n: int             # |vision_super|enc|dec
+    name: str
+
+
+def plan(cfg: ModelConfig) -> list[Group]:
+    if cfg.enc_dec:
+        return [Group("enc", cfg.enc_layers, "enc"),
+                Group("dec", cfg.n_layers, "dec")]
+    if cfg.family == "vlm":
+        assert cfg.n_layers % (cfg.cross_every) == 0
+        return [Group("vision_super", cfg.n_layers // cfg.cross_every, "vs")]
+    if cfg.family == "ssm":
+        return [Group("mamba", cfg.n_layers, "m")]
+    if cfg.hybrid:
+        groups, prev, gi = [], 0, 0
+        fal = sorted(cfg.full_attn_layers)
+        for li in fal:
+            if li > prev:
+                groups.append(Group("hybrid", li - prev, f"h{gi}")); gi += 1
+            groups.append(Group("hybrid_full", 1, f"hf{gi}")); gi += 1
+            prev = li + 1
+        if prev < cfg.n_layers:
+            groups.append(Group("hybrid", cfg.n_layers - prev, f"h{gi}"))
+        return groups
+    if cfg.moe is not None:
+        gs = []
+        if cfg.dense_layers:
+            gs.append(Group("mla_dense" if cfg.mla else "dense",
+                            cfg.dense_layers, "d"))
+        gs.append(Group("mla_moe" if cfg.mla else "moe",
+                        cfg.n_layers - cfg.dense_layers, "e"))
+        return gs
+    return [Group("dense", cfg.n_layers, "d")]
+
+
+# ---------------------------------------------------------------------- #
+# parameter specs
+# ---------------------------------------------------------------------- #
+def _norm(cfg):
+    return ParamSpec((cfg.d_model,), (None,), "float32", "ones")
+
+
+def _dense_ffn_specs(cfg, kind):
+    d_ff = cfg.dense_d_ff if kind in ("mla_dense",) and cfg.dense_d_ff \
+        else cfg.d_ff
+    scale = 0.02 / math.sqrt(2 * cfg.total_layers)
+    return mlp_specs(cfg.d_model, d_ff, cfg.act, scale)
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "mamba":
+        return {"ln1": _norm(cfg), "ssm": ssm_specs(cfg)}
+    if kind in ("hybrid", "hybrid_full"):
+        return {
+            "ln1": _norm(cfg),
+            "attn": attn.gqa_specs(cfg),
+            "ssm": ssm_specs(cfg),
+            "po_norm_a": _norm(cfg), "po_norm_s": _norm(cfg),
+            "ln2": _norm(cfg), "mlp": _dense_ffn_specs(cfg, kind),
+        }
+    if kind == "vision_super":
+        self_block = {"ln1": _norm(cfg), "attn": attn.gqa_specs(cfg),
+                      "ln2": _norm(cfg), "mlp": _dense_ffn_specs(cfg, kind)}
+        stacked = jax.tree.map(
+            lambda s: ParamSpec((cfg.cross_every - 1, *s.shape),
+                                (None, *s.axes), s.dtype, s.init, s.scale),
+            self_block, is_leaf=lambda x: isinstance(x, ParamSpec))
+        gate = ParamSpec((), (), "float32", "zeros")
+        return {"self": stacked,
+                "cross": {"ln1": _norm(cfg), "attn": attn.gqa_specs(cfg),
+                          "gate_attn": gate,
+                          "ln2": _norm(cfg), "mlp": _dense_ffn_specs(cfg, kind),
+                          "gate_mlp": gate}}
+    if kind == "dec":
+        return {"ln1": _norm(cfg), "attn": attn.gqa_specs(cfg),
+                "lnx": _norm(cfg), "xattn": attn.gqa_specs(cfg),
+                "ln2": _norm(cfg), "mlp": _dense_ffn_specs(cfg, kind)}
+    out = {"ln1": _norm(cfg)}
+    out["attn"] = attn.mla_specs(cfg) if kind.startswith("mla") else \
+        attn.gqa_specs(cfg)
+    out["ln2"] = _norm(cfg)
+    if kind.endswith("moe"):
+        out["moe"] = moe_specs(cfg)
+    else:
+        out["mlp"] = _dense_ffn_specs(cfg, kind)
+    return out
+
+
+def _stack(specs, n):
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.axes), s.dtype, s.init,
+                            s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    V, d = cfg.vocab_padded, cfg.d_model
+    out = {
+        "embed": ParamSpec((V, d), (None, "tp"), scale=1.0 / math.sqrt(d)),
+        "final_norm": _norm(cfg),
+        "unembed": ParamSpec((d, V), ("fsdp", "tp")),
+        "groups": {},
+    }
+    for g in plan(cfg):
+        specs = block_specs(cfg, g.kind)
+        out["groups"][g.name] = _stack(specs, g.n) if g.n > 1 else \
+            _stack(specs, 1)
+    if cfg.enc_dec:
+        out["enc_final_norm"] = _norm(cfg)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# block application
+# ---------------------------------------------------------------------- #
+def _cross_kv(p_attn, ctx, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", ctx, p_attn["wk"],
+                   preferred_element_type=jnp.bfloat16)
+    v = jnp.einsum("bsd,dhk->bshk", ctx, p_attn["wv"],
+                   preferred_element_type=jnp.bfloat16)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p_attn["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _cross_q(p_attn, h, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", h, p_attn["wq"],
+                   preferred_element_type=jnp.bfloat16)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p_attn["q_norm"], cfg.norm_eps)
+    return q
+
+
+def block_apply(kind, p, x, cfg, sh, positions, ctx=None):
+    """Full-sequence (train / prefill) block.  Returns (x, cache_entry)."""
+    cache = {}
+    if kind == "mamba":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, (conv_s, ssm_s) = ssm_prefill(p["ssm"], h, cfg, cfg.ssm_chunk)
+        cache = {"conv": conv_s, "ssm": ssm_s}
+        return x + y, cache
+
+    if kind in ("hybrid", "hybrid_full"):
+        window = None if kind == "hybrid_full" else cfg.sliding_window
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+        o = attn.attention_core(q, k, v, causal=True, window=window,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block)
+        a_out = attn.gqa_out(p["attn"], o)
+        s_out, (conv_s, ssm_s) = ssm_prefill(p["ssm"], h, cfg, cfg.ssm_chunk)
+        mixed = 0.5 * (rmsnorm(a_out, p["po_norm_a"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["po_norm_s"], cfg.norm_eps))
+        x = x + mixed
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        W = window or k.shape[1]
+        cache = {"k": k[:, -W:], "v": v[:, -W:], "conv": conv_s, "ssm": ssm_s}
+        return x, cache
+
+    if kind.startswith("mla"):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a_out, (c_kv, k_rope) = attn.mla_attention_train(
+            p["attn"], h, cfg, positions, cfg.q_block, cfg.kv_block)
+        x = x + a_out
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind.endswith("moe"):
+            x = x + moe_apply(p["moe"], h2, cfg, sh)
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        return x, {"ckv": c_kv, "kr": k_rope}
+
+    if kind == "vision_super":
+        caches = []
+        for i in range(cfg.cross_every - 1):
+            pi = jax.tree.map(lambda a: a[i], p["self"])
+            h = rmsnorm(x, pi["ln1"], cfg.norm_eps)
+            q, k, v = attn.gqa_qkv(pi["attn"], h, cfg, positions)
+            o = attn.attention_core(q, k, v, causal=True,
+                                    q_block=cfg.q_block, kv_block=cfg.kv_block)
+            x = x + attn.gqa_out(pi["attn"], o)
+            h2 = rmsnorm(x, pi["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pi["mlp"], h2, cfg.act)
+            caches.append({"k": k, "v": v})
+        pc = p["cross"]
+        h = rmsnorm(x, pc["ln1"], cfg.norm_eps)
+        ck, cv = _cross_kv(pc["attn"], ctx, cfg)
+        q = _cross_q(pc["attn"], h, cfg)
+        o = attn.attention_core(q, ck, cv, causal=False,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + jnp.tanh(pc["gate_attn"]).astype(x.dtype) * attn.gqa_out(pc["attn"], o)
+        h2 = rmsnorm(x, pc["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(pc["gate_mlp"]).astype(x.dtype) * mlp_apply(pc["mlp"], h2, cfg.act)
+        cache = {"k": jnp.stack([c["k"] for c in caches], 0),
+                 "v": jnp.stack([c["v"] for c in caches], 0),
+                 "ck": ck, "cv": cv}
+        return x, cache
+
+    if kind == "dec":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+        o = attn.attention_core(q, k, v, causal=True,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + attn.gqa_out(p["attn"], o)
+        hx = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        ck, cv = _cross_kv(p["xattn"], ctx, cfg)
+        qx = _cross_q(p["xattn"], hx, cfg)
+        ox = attn.attention_core(qx, ck, cv, causal=False,
+                                 q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + attn.gqa_out(p["xattn"], ox)
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        return x, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+    # dense / moe / enc
+    causal = kind != "enc"
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+    o = attn.attention_core(q, k, v, causal=causal, window=cfg.sliding_window,
+                            q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = x + attn.gqa_out(p["attn"], o)
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + moe_apply(p["moe"], h2, cfg, sh)
+    else:
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+    cache = {} if kind == "enc" else {"k": k, "v": v}
+    return x, cache
+
+
+# ---------------------------------------------------------------------- #
+# decode-step block application
+# ---------------------------------------------------------------------- #
+def _write_kv(cache_k, cache_v, k, v, pos, window):
+    W = cache_k.shape[1]
+    wpos = pos % W if window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, wpos, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, wpos, 1)
+    return cache_k, cache_v
+
+
+def block_decode(kind, p, x, cfg, sh, cache, pos):
+    """x: [B,1,d].  Returns (x, cache')."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if kind == "mamba":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, (conv_s, ssm_s) = ssm_decode(p["ssm"], h, cfg,
+                                        cache["conv"], cache["ssm"])
+        return x + y, {"conv": conv_s, "ssm": ssm_s}
+
+    if kind in ("hybrid", "hybrid_full"):
+        window = None if kind == "hybrid_full" else cfg.sliding_window
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+        ck, cv = _write_kv(cache["k"], cache["v"], k, v, pos,
+                           window is not None)
+        o = attn.decode_attention(q, ck, cv, pos, window=window)
+        a_out = attn.gqa_out(p["attn"], o)
+        s_out, (conv_s, ssm_s) = ssm_decode(p["ssm"], h, cfg,
+                                            cache["conv"], cache["ssm"])
+        mixed = 0.5 * (rmsnorm(a_out, p["po_norm_a"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["po_norm_s"], cfg.norm_eps))
+        x = x + mixed
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        return x, {"k": ck, "v": cv, "conv": conv_s, "ssm": ssm_s}
+
+    if kind.startswith("mla"):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a_out, ckv, kr = attn.mla_attention_decode(
+            p["attn"], h, cfg, cache["ckv"], cache["kr"], pos)
+        x = x + a_out
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind.endswith("moe"):
+            x = x + moe_apply(p["moe"], h2, cfg, sh)
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        return x, {"ckv": ckv, "kr": kr}
+
+    if kind == "vision_super":
+        ks, vs = [], []
+        for i in range(cfg.cross_every - 1):
+            pi = jax.tree.map(lambda a: a[i], p["self"])
+            h = rmsnorm(x, pi["ln1"], cfg.norm_eps)
+            q, k, v = attn.gqa_qkv(pi["attn"], h, cfg, positions)
+            ck_, cv_ = _write_kv(cache["k"][i], cache["v"][i], k, v, pos, False)
+            o = attn.decode_attention(q, ck_, cv_, pos)
+            x = x + attn.gqa_out(pi["attn"], o)
+            h2 = rmsnorm(x, pi["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pi["mlp"], h2, cfg.act)
+            ks.append(ck_); vs.append(cv_)
+        pc = p["cross"]
+        h = rmsnorm(x, pc["ln1"], cfg.norm_eps)
+        q = _cross_q(pc["attn"], h, cfg)
+        o = attn.decode_attention(q, cache["ck"], cache["cv"],
+                                  cache["ck"].shape[1] - 1)
+        x = x + jnp.tanh(pc["gate_attn"]).astype(x.dtype) * attn.gqa_out(pc["attn"], o)
+        h2 = rmsnorm(x, pc["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(pc["gate_mlp"]).astype(x.dtype) * mlp_apply(pc["mlp"], h2, cfg.act)
+        return x, {"k": jnp.stack(ks, 0), "v": jnp.stack(vs, 0),
+                   "ck": cache["ck"], "cv": cache["cv"]}
+
+    if kind == "dec":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+        ck_, cv_ = _write_kv(cache["k"], cache["v"], k, v, pos, False)
+        o = attn.decode_attention(q, ck_, cv_, pos)
+        x = x + attn.gqa_out(p["attn"], o)
+        hx = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        qx = _cross_q(p["xattn"], hx, cfg)
+        ox = attn.decode_attention(qx, cache["ck"], cache["cv"],
+                                   cache["ck"].shape[1] - 1)
+        x = x + attn.gqa_out(p["xattn"], ox)
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+        return x, {"k": ck_, "v": cv_, "ck": cache["ck"], "cv": cache["cv"]}
+
+    # dense / moe
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn.gqa_qkv(p["attn"], h, cfg, positions)
+    ck, cv = _write_kv(cache["k"], cache["v"], k, v, pos,
+                       cfg.sliding_window is not None)
+    o = attn.decode_attention(q, ck, cv, pos, window=cfg.sliding_window)
+    x = x + attn.gqa_out(p["attn"], o)
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + moe_apply(p["moe"], h2, cfg, sh)
+    else:
+        x = x + mlp_apply(p["mlp"], h2, cfg.act)
+    return x, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------- #
+# model-level passes
+# ---------------------------------------------------------------------- #
+def _maybe_remat(f, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        # save projection/MLP dot outputs; the attention tile interior keeps
+        # its own inner checkpoint (flash-style recompute) regardless.
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots)
+    return f
+
+
+def _encode(params, cfg, sh, ctx_embeds):
+    """Encoder stack (enc-dec models): ctx_embeds [B,S_src,d] -> memory."""
+    x = ctx_embeds
+    g = plan(cfg)[0]
+    gp = params["groups"][g.name]
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    def body(carry, pl):
+        y, _ = block_apply("enc", pl, carry, cfg, sh, positions, None)
+        return sh.constrain_safe(y, "dp", "sp", None), None
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, gp)
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def embed_tokens(params, tokens, cfg, sh):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return sh.constrain_safe(x, "dp", "sp", None)
+
+
+def logits_from(params, x, cfg):
+    return jnp.einsum("bsd,dv->bsv", rmsnorm(x, params["final_norm"],
+                                             cfg.norm_eps),
+                      params["unembed"], preferred_element_type=jnp.bfloat16)
+
+
+def forward_train(params, batch, cfg: ModelConfig, sh: Sharder):
+    """batch: {"tokens": [B,S] int32, optional "ctx": [B,Sc,d]}.
+    Returns logits [B,S,V]."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, sh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx = batch.get("ctx")
+    if cfg.enc_dec:
+        ctx = _encode(params, cfg, sh, ctx)
+        groups = plan(cfg)[1:]
+    else:
+        groups = plan(cfg)
+    for g in groups:
+        gp = params["groups"][g.name]
+        def body(carry, pl):
+            y, _ = block_apply(g.kind, pl, carry, cfg, sh, positions, ctx)
+            return sh.constrain_safe(y, "dp", "sp", None), None
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, gp)
+    return logits_from(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg, sh):
+    logits = forward_train(params, batch, cfg, sh)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], -1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def prefill(params, batch, cfg: ModelConfig, sh: Sharder):
+    """Prompt pass: returns (last-token logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, sh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx = batch.get("ctx")
+    caches = {}
+    if cfg.enc_dec:
+        ctx = _encode(params, cfg, sh, ctx)
+        groups = plan(cfg)[1:]
+    else:
+        groups = plan(cfg)
+    for g in groups:
+        gp = params["groups"][g.name]
+        def body(carry, pl):
+            y, cache = block_apply(g.kind, pl, carry, cfg, sh, positions, ctx)
+            return sh.constrain_safe(y, "dp", "sp", None), cache
+        body = _maybe_remat(body, cfg)
+        x, cs = jax.lax.scan(body, x, gp)
+        caches[g.name] = cs
+    return logits_from(params, x[:, -1:], cfg), caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, sh: Sharder):
+    """tokens: [B,1]; pos: scalar int32.  Returns (logits, cache')."""
+    x = embed_tokens(params, tokens, cfg, sh)
+    groups = plan(cfg)[1:] if cfg.enc_dec else plan(cfg)
+    new_caches = {}
+    for g in groups:
+        gp = params["groups"][g.name]
+        def body(carry, xs):
+            pl, cl = xs
+            y, c2 = block_decode(g.kind, pl, carry, cfg, sh, cl, pos)
+            return y, c2
+        x, cs = jax.lax.scan(body, x, (gp, cache[g.name]))
+        new_caches[g.name] = cs
+    return logits_from(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------- #
+# abstract inputs & cache specs (dry-run)
+# ---------------------------------------------------------------------- #
+def cache_struct(cfg: ModelConfig, batch: int, seq: int, sh: Sharder):
+    """ShapeDtypeStructs of the decode cache at context length ``seq``."""
+    bf16 = jnp.bfloat16
+    f32 = jnp.float32
+    di = cfg.ssm_expand * cfg.d_model
+    out = {}
+
+    def sds(shape, axes, dtype=bf16):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=sh.sharding(axes, shape))
+
+    groups = plan(cfg)[1:] if cfg.enc_dec else plan(cfg)
+    for g in groups:
+        L = g.n
+        c = {}
+        if g.kind == "mamba":
+            c = {"conv": sds((L, batch, di, cfg.ssm_conv - 1), (None, "dp", "tp", None)),
+                 "ssm": sds((L, batch, di, cfg.ssm_state), (None, "dp", "tp", None), f32)}
+        elif g.kind in ("hybrid", "hybrid_full"):
+            W = cfg.sliding_window if g.kind == "hybrid" else seq
+            c = {"k": sds((L, batch, W, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None)),
+                 "v": sds((L, batch, W, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None)),
+                 "conv": sds((L, batch, di, cfg.ssm_conv - 1), (None, "dp", "tp", None)),
+                 "ssm": sds((L, batch, di, cfg.ssm_state), (None, "dp", "tp", None), f32)}
+        elif g.kind.startswith("mla"):
+            m = cfg.mla
+            c = {"ckv": sds((L, batch, seq, m.kv_lora), (None, "dp", "tp", None)),
+                 "kr": sds((L, batch, seq, m.rope_dim), (None, "dp", "tp", None))}
+        elif g.kind == "vision_super":
+            ns = cfg.cross_every - 1
+            c = {"k": sds((L, ns, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                          (None, None, "dp", "tp", None, None)),
+                 "v": sds((L, ns, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                          (None, None, "dp", "tp", None, None)),
+                 "ck": sds((L, batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim),
+                           (None, "dp", None, None, None)),
+                 "cv": sds((L, batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim),
+                           (None, "dp", None, None, None))}
+        elif g.kind == "dec":
+            c = {"k": sds((L, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None)),
+                 "v": sds((L, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None)),
+                 "ck": sds((L, batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim),
+                           (None, "dp", None, None, None)),
+                 "cv": sds((L, batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.head_dim),
+                           (None, "dp", None, None, None))}
+        else:
+            W = cfg.sliding_window or seq
+            c = {"k": sds((L, batch, W, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None)),
+                 "v": sds((L, batch, W, cfg.n_kv_heads, cfg.head_dim),
+                          (None, "dp", "tp", None, None))}
+        out[g.name] = c
+    return out

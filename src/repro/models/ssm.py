@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM block (falcon-mamba, hymba's parallel SSM path).
+
+Prefill runs a chunked parallel scan: an outer ``lax.scan`` over time-chunks
+carrying the SSM state, with a ``lax.associative_scan`` inside each chunk —
+the TPU-friendly decomposition (the Pallas kernel in
+``repro.kernels.selective_scan`` implements the same chunk step).  Decode is
+the O(1) single-step recurrence; its state is the whole "KV cache", which is
+what makes the ``long_500k`` cells tractable for SSM/hybrid archs.
+
+Channel dimension (``d_inner``) is embarrassingly parallel -> sharded over
+the ``model`` (TP) axis; state dim N is tiny (16).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, fdot
+
+__all__ = ["ssm_specs", "ssm_prefill", "ssm_decode"]
+
+
+def ssm_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    scale_out = 0.02 / math.sqrt(2 * cfg.total_layers)
+    return {
+        "in_proj": ParamSpec((d, 2, di), ("fsdp", None, "tp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, di), (None, "tp")),
+        "conv_b": ParamSpec((di,), ("tp",), init="zeros"),
+        "x_proj": ParamSpec((di, dt_rank + 2 * N), ("tp", None)),
+        "dt_w": ParamSpec((dt_rank, di), (None, "tp"),
+                          scale=dt_rank ** -0.5),
+        "dt_b": ParamSpec((di,), ("tp",), "float32", "dt_bias"),
+        "A_log": ParamSpec((di, N), ("tp", None), "float32", "mamba_a"),
+        "D": ParamSpec((di,), ("tp",), "float32", "ones"),
+        "out_proj": ParamSpec((di, d), ("tp", "fsdp"), scale=scale_out),
+    }
+
+
+def _ssm_inputs(p, x, cfg):
+    """Shared projections: returns (u, z, dt, Bc, Cc) with
+    u,z: [B,S,di]; dt: [B,S,di] (f32); Bc,Cc: [B,S,N] (f32)."""
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["in_proj"],
+                    preferred_element_type=jnp.bfloat16)
+    u, z = xz[:, :, 0], xz[:, :, 1]
+    return u, z
+
+
+def _post_conv(p, u_conv, cfg):
+    N = cfg.ssm_state
+    dt_rank = p["dt_w"].shape[0]
+    u_act = jax.nn.silu(u_conv.astype(jnp.float32)).astype(u_conv.dtype)
+    proj = fdot("bsi,ir->bsr", u_act, p["x_proj"])
+    dt_in, Bc, Cc = (proj[..., :dt_rank], proj[..., dt_rank:dt_rank + N],
+                     proj[..., dt_rank + N:])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_w"].astype(jnp.float32))
+        + p["dt_b"])
+    return u_act, dt, Bc, Cc
+
+
+def ssm_prefill(p, x, cfg, chunk: int = 256):
+    """x: [B,S,d] -> (y [B,S,d], (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    u, z = _ssm_inputs(p, x, cfg)
+
+    # causal depthwise conv over time
+    u_pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    u_conv = sum(u_pad[:, i: i + S] * p["conv_w"][i][None, None]
+                 for i in range(K)) + p["conv_b"][None, None]
+    u_act, dt, Bc, Cc = _post_conv(p, u_conv, cfg)
+
+    A = -jnp.exp(p["A_log"])                                   # [di,N]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:       # dt=0 padding is the identity step: da=1, db=0
+        u_act = jnp.pad(u_act, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def chunk_step(h, xs):
+        with jax.named_scope("ssm_chunk"):
+            return _chunk_inner(h, xs)
+
+    def _chunk_inner(h, xs):
+        ua, dt_c, B_c, C_c = xs                                # [B,chunk,...]
+        da = jnp.exp(dt_c[..., None] * A[None, None])          # [B,c,di,N]
+        db = (dt_c * ua.astype(jnp.float32))[..., None] * B_c[:, :, None]
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        a_sc, b_sc = jax.lax.associative_scan(comb, (da, db), axis=1)
+        hs = a_sc * h[:, None] + b_sc                          # [B,c,di,N]
+        y = jnp.einsum("bcin,bcn->bci", hs, C_c)
+        return hs[:, -1], y
+
+    ur = u_act.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    Br = Bc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cr = Cc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (ur, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S]
+    y = y + u_act[:, :S].astype(jnp.float32) * p["D"][None, None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.bfloat16)
+    conv_state = u[:, -(K - 1):].transpose(0, 2, 1) if K > 1 else \
+        jnp.zeros((B, di, 0), u.dtype)
+    return out, (conv_state, h_last)
+
+
+def ssm_decode(p, x, cfg, conv_state, h):
+    """x: [B,1,d]; conv_state: [B,di,K-1]; h: [B,di,N].  O(1) step."""
+    B = x.shape[0]
+    di = cfg.ssm_expand * cfg.d_model
+    K = cfg.ssm_conv
+    u, z = _ssm_inputs(p, x, cfg)                              # [B,1,di]
+    u1 = u[:, 0]
+    window = jnp.concatenate([conv_state, u1[:, :, None]], axis=2)  # [B,di,K]
+    u_conv = (window * p["conv_w"].T[None]).sum(-1) + p["conv_b"]
+    u_act, dt, Bc, Cc = _post_conv(p, u_conv[:, None], cfg)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[:, 0, :, None] * A[None])                  # [B,di,N]
+    db = (dt[:, 0] * u_act[:, 0].astype(jnp.float32))[..., None] * Bc[:, 0, None]
+    h_new = da * h + db
+    y = jnp.einsum("bin,bn->bi", h_new, Cc[:, 0])
+    y = y + u_act[:, 0].astype(jnp.float32) * p["D"][None]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.bfloat16)
+    return out, (window[:, :, 1:], h_new)

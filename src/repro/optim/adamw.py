@@ -1,0 +1,96 @@
+"""Sharded AdamW with global-norm clipping and schedules.
+
+Optimizer state (m, v) mirrors the parameter ParamSpec tree — same logical
+sharding axes, so state is ZeRO-sharded with the params.  ``state_dtype``
+selects f32 (default) or bf16 moments; at 671B scale bf16 moments are what
+lets params+grads+state fit 16 GB/chip v5e (see DESIGN.md §6 and
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ParamSpec, abstract_params, is_spec
+
+__all__ = ["AdamWConfig", "opt_specs", "init_opt", "adamw_update",
+           "warmup_cosine", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    schedule: Optional[Callable] = None     # step -> lr multiplier
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def opt_specs(param_specs, cfg: AdamWConfig):
+    """ParamSpec tree for (m, v) — same shapes/axes, state dtype, zeros."""
+    def conv(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, cfg.state_dtype, "zeros")
+    tree = jax.tree.map(conv, param_specs, is_leaf=is_spec)
+    return {"m": tree, "v": tree, "step": ParamSpec((), (), "int32", "zeros")}
+
+
+def init_opt(param_specs, cfg: AdamWConfig, sh=None):
+    from ..models.common import init_params
+    return init_params(opt_specs(param_specs, cfg), jax.random.PRNGKey(0), sh)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule else 1.0)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sd = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:                       # no decay on norms/biases
+            delta = delta + cfg.weight_decay * pf
+        return ((pf - lr * delta).astype(p.dtype),
+                mf.astype(sd), vf.astype(sd))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [n[0] for n in new])
+    new_m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    new_v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,99 @@
+"""Logical-axis sharding: maps logical axis names to mesh axes.
+
+Logical axes used throughout the model code:
+
+* ``fsdp``   — parameter/optimizer sharding over the data(-and-pod) axes
+               (ZeRO-3 style: gathered on use by GSPMD).
+* ``tp``     — tensor parallel over the ``model`` axis (heads / ffn / vocab /
+               experts / kv-seq, depending on the tensor).
+* ``dp``     — activation batch sharding over (pod, data).
+* ``sp``     — sequence sharding (sequence parallelism / long-context decode).
+* ``None``   — replicated.
+
+The same model code therefore runs on the single-pod ``(data, model)`` mesh,
+the multi-pod ``(pod, data, model)`` mesh, and the 1-device test mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Sharder", "ShardingRules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical name -> mesh axis (or tuple of axes)."""
+    fsdp: tuple = ("data",)
+    dp: tuple = ("data",)
+    tp: str = "model"
+    sp: Optional[str] = None        # sequence-parallel axis (perf option)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, sequence_parallel: bool = False) -> "ShardingRules":
+        axes = mesh.axis_names
+        data_axes = tuple(a for a in ("pod", "data") if a in axes)
+        return ShardingRules(
+            fsdp=data_axes,
+            dp=data_axes,
+            tp="model" if "model" in axes else None,
+            sp="model" if sequence_parallel and "model" in axes else None,
+        )
+
+
+class Sharder:
+    """Resolves logical axis names against a concrete mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[ShardingRules] = None):
+        self.mesh = mesh
+        self.rules = rules or ShardingRules.for_mesh(mesh)
+
+    def _resolve(self, name) -> Optional[object]:
+        if name is None:
+            return None
+        if name == "fsdp":
+            r = self.rules.fsdp
+            return r if len(r) > 1 else (r[0] if r else None)
+        if name == "dp":
+            r = self.rules.dp
+            return r if len(r) > 1 else (r[0] if r else None)
+        if name == "tp":
+            return self.rules.tp
+        if name == "sp":
+            return self.rules.sp
+        raise ValueError(f"unknown logical axis {name!r}")
+
+    def pspec(self, names: Sequence[Optional[str]]) -> P:
+        return P(*[self._resolve(n) for n in names])
+
+    def sharding(self, names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        # If shape is given, logical axes whose mesh size does not divide
+        # the dim are dropped (e.g. 8 KV heads on a 16-way TP axis ->
+        # replicated KV projections, the standard GQA fallback).
+        if shape is None:
+            return NamedSharding(self.mesh, self.pspec(names))
+        resolved = []
+        for dim, n in zip(shape, names):
+            ax = self._resolve(n)
+            if ax is None:
+                resolved.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= self.mesh.shape[a]
+            resolved.append(ax if dim % size == 0 else None)
+        return NamedSharding(self.mesh, P(*resolved))
+
+    def constrain(self, x, *names):
+        """with_sharding_constraint by logical names (no-op axes resolve to
+        replicated)."""
+        return jax.lax.with_sharding_constraint(x, self.sharding(names))
+
+    # divisibility-aware helper: drop shardings that don't divide the dim.
+    def constrain_safe(self, x, *names):
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(names, x.shape))

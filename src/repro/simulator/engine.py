@@ -1,0 +1,503 @@
+"""Cycle-level interconnection-network simulator in JAX (CAMINOS-equivalent).
+
+Model (documented deviations from the paper's flit-level CAMINOS setup in
+DESIGN.md): slotted time — one slot = one 16-flit packet serialization on a
+link.  Input-queued switches with ``V`` virtual channels per port and
+``Q``-packet queues, credit-based flow control (a packet advances only if the
+downstream input queue for its next VC has room), separable random-priority
+output arbitration (one grant per output port per slot), per-input-port VC
+pre-arbitration (one candidate VC per input port per slot), unbounded
+ejection, per-endpoint injection queues (one NIC per endpoint, one packet
+injected per slot max).
+
+Routing is evaluated *inside* the jitted step on precomputed leaf-distance
+tables:
+
+* ``polarized``        — the paper's adapted Polarized routing (Section 4.3.2)
+  with VC = updown-phase = hops // 2 (1 VC per Up-Down pass — the halved
+  deadlock resources of Section 4.3).
+* ``minimal_adaptive`` — adaptive minimal (Fat-Tree / OFT "MIN").
+* ``ksp``              — randomized minimal-DAG walk (models KSP's random
+  choice among precomputed shortest paths).
+* ``ugal``             — UGAL-L with Valiant intermediate leaf (Dragonfly).
+* ``valiant``          — always-Valiant.
+
+Everything is fixed-shape; a run is a python loop over jitted
+``lax.scan`` chunks so completion can be detected early.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.routing import RoutingTables, polarized_port_mask
+
+BIG = jnp.float32(1e9)
+
+
+# ---------------------------------------------------------------------- #
+# configuration
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    policy: str = "polarized"
+    vcs: int = 4                 # V
+    queue_depth: int = 8         # Q packets per (port, VC) at input
+    out_queue: int = 4           # packets per (port, VC) at output
+    speedup: int = 2             # crossbar sub-rounds per slot
+    endpoint_queue: int = 4      # QE packets per NIC
+    max_hops: int = 8            # routing hop bound (2D* - 2 for polarized)
+    deroute_penalty: float = 8.0
+    pool: Optional[int] = None   # packet pool size (default: auto)
+    hist_bins: int = 4096        # latency histogram bins (slots)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Traffic program.  ``pattern`` one of:
+    uniform | rep | rsp | bu | mice_elephant | all2all | phase.
+
+    * Bernoulli patterns use ``load`` (packets/slot/endpoint).
+    * ``all2all``: each endpoint sends ``rounds`` single-packet messages to
+      (e + r + 1) mod S.
+    * ``phase``: each endpoint sends ``phase_packets`` packets to
+      ``partner[e]`` (used for Rabenseifner phases).
+    """
+    pattern: str = "uniform"
+    load: float = 1.0
+    rounds: int = 0
+    phase_packets: int = 0
+    elephant_frac: float = 0.1   # fraction of messages that are elephants
+    elephant_size: int = 16
+
+
+class Simulator:
+    def __init__(self, tables: RoutingTables, cfg: SimConfig):
+        topo = tables.topo
+        self.tables, self.cfg = tables, cfg
+        self.N = topo.n_switches
+        self.P = topo.max_ports
+        self.V = cfg.vcs
+        self.Q = cfg.queue_depth
+        self.QE = cfg.endpoint_queue
+        self.n1 = topo.n_leaves
+        self.d_leaf = topo.endpoints_per_leaf
+        self.S = topo.n_endpoints
+        self.NQ = self.N * self.P * self.V
+        self.pool = cfg.pool or int(min(2_000_000, max(1 << 14, self.S * 6)))
+
+        self.nbrs = jnp.asarray(topo.nbrs, jnp.int32)            # [N,P]
+        self.nbr_port = jnp.asarray(topo.nbr_port, jnp.int32)    # [N,P]
+        self.valid_port = self.nbrs >= 0
+        self.nbrs0 = jnp.maximum(self.nbrs, 0)
+        assert (tables.dist_leaf >= 0).all(), "disconnected topology"
+        self.dist = jnp.asarray(tables.dist_leaf, jnp.int32)     # [N1,N]
+        self.leaf_ids = jnp.asarray(topo.leaf_ids, jnp.int32)    # [N1]
+
+    # ------------------------------------------------------------------ #
+    def init_state(self, traffic: Traffic, seed_arrays: dict) -> dict:
+        f32, i32 = jnp.float32, jnp.int32
+        Z = lambda *s: jnp.zeros(s, i32)
+        st = {
+            "qbuf": jnp.full((self.NQ, self.Q), -1, i32),
+            "qhead": Z(self.NQ), "qlen": Z(self.NQ),
+            "oq_buf": jnp.full((self.NQ, self.cfg.out_queue), -1, i32),
+            "oq_head": Z(self.NQ), "oq_len": Z(self.NQ),
+            "eq_buf": jnp.full((self.S, self.QE), -1, i32),
+            "eq_head": Z(self.S), "eq_len": Z(self.S),
+            # packet pool
+            "p_free": jnp.ones(self.pool, bool),
+            "p_src": Z(self.pool), "p_dst": Z(self.pool),
+            "p_dst_sw": Z(self.pool), "p_mid": jnp.full(self.pool, -1, i32),
+            "p_born": Z(self.pool), "p_hops": Z(self.pool),
+            # endpoint message program
+            "msg_rem": Z(self.S), "msg_dst": Z(self.S), "prog": Z(self.S),
+            # stats
+            "ejected": Z(), "created": Z(), "hop_sum": Z(),
+            "lat_hist": Z(self.cfg.hist_bins),
+            "slot": Z(),
+            "key": jax.random.PRNGKey(self.cfg.seed),
+        }
+        st.update({k: jnp.asarray(v) for k, v in seed_arrays.items()})
+        return st
+
+    # ------------------------------------------------------------------ #
+    def _inject(self, st, key, traffic: Traffic):
+        """Start messages + push one packet per eligible endpoint."""
+        S, d = self.S, self.d_leaf
+        e = jnp.arange(S, dtype=jnp.int32)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+
+        idle = st["msg_rem"] == 0
+        pat = traffic.pattern
+        if pat in ("uniform", "rep", "rsp", "bu", "mice_elephant"):
+            start = idle & (jax.random.uniform(k1, (S,)) <
+                            traffic.load / self._mean_msg(traffic))
+            if pat == "uniform" or pat == "mice_elephant":
+                dst = jax.random.randint(k2, (S,), 0, S)
+            elif pat == "rep":
+                dst = st["perm"]
+            elif pat == "rsp":
+                dst = st["sigma"][e // d] * d + (e % d)
+            else:  # bu — two halves exchange uniformly
+                half = S // 2
+                lower = e < half
+                r = jax.random.randint(k2, (S,), 0, half)
+                dst = jnp.where(lower, half + r, r % half)
+            size = jnp.ones((S,), jnp.int32)
+            if pat == "mice_elephant":
+                size = jnp.where(jax.random.uniform(k3, (S,)) < traffic.elephant_frac,
+                                 traffic.elephant_size, 1)
+        elif pat == "all2all":
+            start = idle & (st["prog"] < traffic.rounds)
+            dst = (e + st["prog"] + 1) % S
+            size = jnp.ones((S,), jnp.int32)
+        elif pat == "phase":
+            start = idle & (st["prog"] < 1)
+            dst = st["partner"]
+            size = jnp.full((S,), traffic.phase_packets, jnp.int32)
+        else:
+            raise ValueError(pat)
+
+        msg_rem = jnp.where(start, size, st["msg_rem"])
+        msg_dst = jnp.where(start, dst, st["msg_dst"])
+        prog = st["prog"] + start.astype(jnp.int32)
+
+        # one packet per endpoint with pending message + NIC room
+        want = (msg_rem > 0) & (st["eq_len"] < self.QE)
+        src_lr = e // d
+        dst_lr = msg_dst // d
+        local = src_lr == dst_lr
+        # same-leaf fast path: delivered without entering the network.
+        deliver_local = want & local
+        want_net = want & ~local
+
+        rank = jnp.cumsum(want_net.astype(jnp.int32)) - 1
+        free_idx = jnp.nonzero(st["p_free"], size=min(S, self.pool),
+                               fill_value=-1)[0].astype(jnp.int32)
+        pid = jnp.where(want_net, free_idx[jnp.clip(rank, 0, free_idx.shape[0] - 1)], -1)
+        ok = want_net & (pid >= 0)
+
+        # UGAL/Valiant: sample intermediate leaf & (UGAL) compare queue depths
+        mid = jnp.full((S,), -1, jnp.int32)
+        if self.cfg.policy in ("ugal", "valiant"):
+            mid_lr = jax.random.randint(k4, (S,), 0, self.n1)
+            if self.cfg.policy == "ugal":
+                sw = self.leaf_ids[src_lr]
+                nb = self.nbrs0[sw]                                   # [S,P]
+                occ0 = st["qlen"].reshape(self.N, self.P, self.V)[nb, self.nbr_port[sw], 0]
+                vp = self.valid_port[sw]
+                def best(t_lr):
+                    d_n = self.dist[t_lr[:, None], nb]
+                    d_c = self.dist[t_lr, sw]
+                    m = vp & (d_n == d_c[:, None] - 1)
+                    return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
+                q_min = best(dst_lr)
+                q_val = best(mid_lr)
+                d_min = self.dist[dst_lr, sw]
+                d_val = self.dist[mid_lr, sw] + self.dist[dst_lr, self.leaf_ids[mid_lr]]
+                take_val = q_min * d_min > q_val * d_val
+                mid = jnp.where(take_val, mid_lr, -1)
+            else:
+                mid = mid_lr
+
+        # sentinel index == pool size -> dropped writes for non-injectors
+        widx = jnp.where(ok, jnp.maximum(pid, 0), self.pool)
+        st = dict(st)
+        st["p_free"] = st["p_free"].at[widx].set(False, mode="drop")
+        st["p_src"] = st["p_src"].at[widx].set(src_lr, mode="drop")
+        st["p_dst"] = st["p_dst"].at[widx].set(dst_lr, mode="drop")
+        st["p_dst_sw"] = st["p_dst_sw"].at[widx].set(self.leaf_ids[dst_lr], mode="drop")
+        st["p_mid"] = st["p_mid"].at[widx].set(mid, mode="drop")
+        st["p_born"] = st["p_born"].at[widx].set(st["slot"], mode="drop")
+        st["p_hops"] = st["p_hops"].at[widx].set(0, mode="drop")
+        # push into NIC queue (e is unique per row -> no collisions)
+        pos = (st["eq_head"] + st["eq_len"]) % self.QE
+        st["eq_buf"] = st["eq_buf"].at[e, jnp.where(ok, pos, self.QE)].set(
+            jnp.maximum(pid, 0), mode="drop")
+        st["eq_len"] = st["eq_len"] + ok.astype(jnp.int32)
+
+        consumed = ok | deliver_local
+        st["msg_rem"] = msg_rem - consumed.astype(jnp.int32)
+        st["msg_dst"] = msg_dst
+        st["prog"] = prog
+        n_local = deliver_local.sum(dtype=jnp.int32)
+        st["created"] = st["created"] + ok.sum(dtype=jnp.int32) + n_local
+        st["ejected"] = st["ejected"] + n_local
+        st["lat_hist"] = st["lat_hist"].at[1].add(n_local)
+        return st
+
+    def _mean_msg(self, t: Traffic) -> float:
+        if t.pattern == "mice_elephant":
+            return (1 - t.elephant_frac) * 1.0 + t.elephant_frac * t.elephant_size
+        return 1.0
+
+    # ------------------------------------------------------------------ #
+    def _crossbar_round(self, st, key, ep_active: bool):
+        """One crossbar sub-round: VC pre-arbitration, routing, output
+        arbitration, input-queue -> output-queue moves, ejections."""
+        N, P, V, Q, S = self.N, self.P, self.V, self.Q, self.S
+        OQ = self.cfg.out_queue
+        k_vc, k_tie, k_arb = jax.random.split(key, 3)
+
+        qlen3 = st["qlen"].reshape(N, P, V)
+        # ---- VC pre-arbitration: one candidate VC per (switch, in-port) ----
+        vc_prio = jax.random.uniform(k_vc, (N, P, V))
+        vc_prio = jnp.where(qlen3 > 0, vc_prio, -1.0)
+        vc_sel = jnp.argmax(vc_prio, axis=2)                       # [N,P]
+        has_pkt = jnp.take_along_axis(qlen3, vc_sel[:, :, None], 2)[:, :, 0] > 0
+
+        q_idx = (jnp.arange(N * P, dtype=jnp.int32).reshape(N, P) * V
+                 + vc_sel.astype(jnp.int32)).reshape(-1)           # [N*P]
+        head = st["qbuf"].reshape(-1)[q_idx * Q + st["qhead"][q_idx]]
+        net_pkt = jnp.where(has_pkt.reshape(-1), head, -1)
+
+        # endpoint (NIC) heads — only in sub-round 0 (NIC link rate = 1/slot)
+        ep_head = st["eq_buf"].reshape(-1)[
+            jnp.arange(S, dtype=jnp.int32) * self.QE + st["eq_head"]]
+        ep_pkt = jnp.where((st["eq_len"] > 0) & ep_active, ep_head, -1)
+
+        # ---- unified requester table ----
+        cur_net = jnp.repeat(jnp.arange(N, dtype=jnp.int32), P)
+        cur_ep = self.leaf_ids[jnp.arange(S, dtype=jnp.int32) // self.d_leaf]
+        cur = jnp.concatenate([cur_net, cur_ep])                    # [NR]
+        pkt = jnp.concatenate([net_pkt, ep_pkt])
+        NR = cur.shape[0]
+        valid = pkt >= 0
+        pkt0 = jnp.maximum(pkt, 0)
+
+        s_lr, t_lr = st["p_src"][pkt0], st["p_dst"][pkt0]
+        hops = st["p_hops"][pkt0]
+        dst_sw = st["p_dst_sw"][pkt0]
+        mid_lr = st["p_mid"][pkt0]
+
+        eject = valid & (cur == dst_sw)
+        route = valid & ~eject
+
+        nb = self.nbrs0[cur]                                        # [NR,P]
+        vp = self.valid_port[cur]
+        dflat = self.dist.reshape(-1)
+        d_ct = dflat[t_lr * N + cur]
+        d_nt = dflat[(t_lr * N)[:, None] + nb]
+
+        pol = self.cfg.policy
+        if pol == "polarized":
+            d_cs = dflat[s_lr * N + cur]
+            d_ns = dflat[(s_lr * N)[:, None] + nb]
+            allowed, deroute = polarized_port_mask(
+                d_cs[:, None], d_ct[:, None], d_ns, d_nt,
+                hops[:, None], self.cfg.max_hops, vp)
+            next_vc = jnp.minimum(hops // 2, V - 1)
+        elif pol in ("minimal_adaptive", "ksp"):
+            allowed = vp & (d_nt == d_ct[:, None] - 1)
+            deroute = jnp.zeros_like(allowed)
+            next_vc = jnp.minimum(hops // 2, V - 1)
+        elif pol in ("ugal", "valiant"):
+            tgt = jnp.where(mid_lr >= 0, mid_lr, t_lr)
+            d_cg = dflat[tgt * N + cur]
+            d_ng = dflat[(tgt * N)[:, None] + nb]
+            allowed = vp & (d_ng == d_cg[:, None] - 1)
+            deroute = jnp.zeros_like(allowed)
+            next_vc = jnp.minimum(hops, V - 1)
+        else:
+            raise ValueError(pol)
+
+        # congestion signal: local output queue + downstream input queue for
+        # the flight VC.  Credit = room in the local output queue.
+        oq_idx = (cur[:, None] * P + jnp.arange(P, dtype=jnp.int32)[None, :]
+                  ) * V + next_vc[:, None]                          # [NR,P]
+        dq_idx = (nb * P + self.nbr_port[cur]) * V + next_vc[:, None]
+        occ = st["oq_len"][oq_idx] + st["qlen"][dq_idx]
+        credit = st["oq_len"][oq_idx] < OQ
+        score = (occ.astype(jnp.float32)
+                 + self.cfg.deroute_penalty * deroute
+                 + jax.random.uniform(k_tie, (NR, P)))
+        if pol == "ksp":
+            score = jax.random.uniform(k_tie, (NR, P))
+        score = jnp.where(allowed & credit, score, BIG)
+        port = jnp.argmin(score, axis=1).astype(jnp.int32)
+        can_move = route & (jnp.min(score, axis=1) < BIG)
+
+        # ---- output arbitration: one grant per (switch, out-port, round) ----
+        out_key = cur * P + port                                    # [NR]
+        # unique int32 priorities: 8 random high bits | requester index
+        rnd = jax.random.randint(k_arb, (NR,), 0, 1 << 8, dtype=jnp.int32)
+        prio = (rnd << 23) | jnp.arange(NR, dtype=jnp.int32)
+        prio = jnp.where(can_move, prio, -1)
+        seg = jnp.full((N * P,), -1, jnp.int32).at[out_key].max(prio)
+        win = can_move & (seg[out_key] == prio)
+
+        # ---- moves: input queue -> output queue ----
+        tgt_q = oq_idx[jnp.arange(NR), port]
+        tgt_pos = tgt_q * OQ + (st["oq_head"][tgt_q] + st["oq_len"][tgt_q]) % OQ
+        oq_buf = st["oq_buf"].reshape(-1)
+        oq_buf = oq_buf.at[jnp.where(win, tgt_pos, oq_buf.shape[0])].set(
+            pkt0, mode="drop")
+        oq_len = st["oq_len"].at[jnp.where(win, tgt_q, self.NQ)].add(1, mode="drop")
+
+        # pops: winners + ejectors leave their input queues
+        leave = win | eject
+        net_leave = leave[: N * P]
+        qi = jnp.where(net_leave, q_idx, self.NQ)
+        qhead = st["qhead"].at[qi].add(1, mode="drop") % Q
+        qlen = st["qlen"].at[qi].add(-1, mode="drop")
+        ep_leave = leave[N * P:]
+        eq_head = (st["eq_head"] + ep_leave.astype(jnp.int32)) % self.QE
+        eq_len = st["eq_len"] - ep_leave.astype(jnp.int32)
+
+        # ejections: free pool, record stats
+        p_free = st["p_free"].at[jnp.where(eject, pkt0, self.pool)].set(
+            True, mode="drop")
+        lat = jnp.clip(st["slot"] - st["p_born"][pkt0] + 1, 0,
+                       self.cfg.hist_bins - 1)
+        lat_hist = st["lat_hist"].at[jnp.where(eject, lat, 0)].add(
+            jnp.where(eject, 1, 0))
+
+        st = dict(st)
+        st["oq_buf"] = oq_buf.reshape(self.NQ, OQ)
+        st["oq_len"] = oq_len
+        st["qhead"], st["qlen"] = qhead, qlen
+        st["eq_head"], st["eq_len"] = eq_head, eq_len
+        st["p_free"] = p_free
+        st["lat_hist"] = lat_hist
+        st["ejected"] = st["ejected"] + eject.sum(dtype=jnp.int32)
+        st["hop_sum"] = st["hop_sum"] + jnp.where(eject, hops, 0).sum(dtype=jnp.int32)
+        return st
+
+    def _link_phase(self, st, key):
+        """Move one packet per link: output-queue head -> downstream input
+        queue (credit-checked), incrementing hop counts and assigning the
+        packet to the downstream switch."""
+        N, P, V, Q = self.N, self.P, self.V, self.Q
+        OQ = self.cfg.out_queue
+        # pick one non-empty output VC per (switch, port) with downstream room
+        oq_len3 = st["oq_len"].reshape(N, P, V)
+        np_idx = jnp.arange(N * P, dtype=jnp.int32)
+        sw = np_idx // P
+        pt = np_idx % P
+        nb = self.nbrs0[sw, pt]                                     # [N*P]
+        nbp = self.nbr_port[sw, pt]
+        link_ok = self.valid_port[sw, pt]
+        # downstream input queue per VC
+        dq = (nb[:, None] * P + nbp[:, None]) * V + jnp.arange(V, dtype=jnp.int32)
+        room = st["qlen"][dq] < Q                                   # [N*P,V]
+        nonempty = oq_len3.reshape(N * P, V) > 0
+        cand = nonempty & room & link_ok[:, None]
+        prio = jnp.where(cand, jax.random.uniform(key, (N * P, V)), -1.0)
+        vcs = jnp.argmax(prio, axis=1).astype(jnp.int32)
+        send = jnp.take_along_axis(cand, vcs[:, None], 1)[:, 0]
+
+        src_q = np_idx * V + vcs
+        pkt = st["oq_buf"].reshape(-1)[src_q * OQ + st["oq_head"][src_q]]
+        pkt0 = jnp.maximum(pkt, 0)
+        tgt_q = dq[np_idx, vcs]
+        tgt_pos = tgt_q * Q + (st["qhead"][tgt_q] + st["qlen"][tgt_q]) % Q
+
+        qbuf = st["qbuf"].reshape(-1)
+        qbuf = qbuf.at[jnp.where(send, tgt_pos, qbuf.shape[0])].set(pkt0, mode="drop")
+        qlen = st["qlen"].at[jnp.where(send, tgt_q, self.NQ)].add(1, mode="drop")
+        sq = jnp.where(send, src_q, self.NQ)
+        oq_head = st["oq_head"].at[sq].add(1, mode="drop") % OQ
+        oq_len = st["oq_len"].at[sq].add(-1, mode="drop")
+        p_hops = st["p_hops"].at[jnp.where(send, pkt0, self.pool)].add(1, mode="drop")
+        # clear UGAL/Valiant intermediate when the packet reaches it
+        mid_lr = st["p_mid"][pkt0]
+        reached_mid = send & (mid_lr >= 0) & (nb == self.leaf_ids[jnp.maximum(mid_lr, 0)])
+        p_mid = st["p_mid"].at[jnp.where(reached_mid, pkt0, self.pool)].set(
+            -1, mode="drop")
+
+        st = dict(st)
+        st["qbuf"] = qbuf.reshape(self.NQ, Q)
+        st["qlen"] = qlen
+        st["oq_head"], st["oq_len"] = oq_head, oq_len
+        st["p_hops"], st["p_mid"] = p_hops, p_mid
+        return st
+
+    def _step(self, st, traffic: Traffic):
+        key, k_inj, k_link, *k_xb = jax.random.split(
+            st["key"], 3 + self.cfg.speedup)
+        st = dict(st)
+        st["key"] = key
+        st = self._inject(st, k_inj, traffic)
+        for r in range(self.cfg.speedup):
+            st = self._crossbar_round(st, k_xb[r], ep_active=True)
+        st = self._link_phase(st, k_link)
+        st["slot"] = st["slot"] + 1
+        return st
+
+    # ------------------------------------------------------------------ #
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def run_chunk(self, st, traffic: Traffic, n_slots: int):
+        def body(carry, _):
+            return self._step(carry, traffic), None
+        st, _ = jax.lax.scan(body, st, None, length=n_slots)
+        return st
+
+    # ------------------------------------------------------------------ #
+    # high-level drivers
+    # ------------------------------------------------------------------ #
+    def make_state(self, traffic: Traffic, seed: int = 0) -> dict:
+        rng = np.random.default_rng(seed)
+        seed_arrays = {}
+        if traffic.pattern == "rep":
+            seed_arrays["perm"] = rng.permutation(self.S).astype(np.int32)
+        if traffic.pattern == "rsp":
+            seed_arrays["sigma"] = rng.permutation(self.n1).astype(np.int32)
+        if traffic.pattern == "phase":
+            seed_arrays["partner"] = np.zeros(self.S, np.int32)  # set by caller
+        return self.init_state(traffic, seed_arrays)
+
+    def run_throughput(self, traffic: Traffic, warm: int = 200,
+                       measure: int = 400, seed: int = 0) -> dict:
+        st = self.make_state(traffic, seed)
+        st = self.run_chunk(st, traffic, warm)
+        e0 = int(st["ejected"])
+        st = self.run_chunk(st, traffic, measure)
+        e1, h1 = int(st["ejected"]), int(st["hop_sum"])
+        return {
+            "throughput": (e1 - e0) / (self.S * measure),
+            "avg_hops": h1 / max(e1, 1),
+            "ejected": e1,
+            "state": st,
+        }
+
+    def run_latency(self, traffic: Traffic, warm: int = 200,
+                    measure: int = 600, seed: int = 0) -> dict:
+        st = self.make_state(traffic, seed)
+        st = self.run_chunk(st, traffic, warm)
+        h0 = np.asarray(st["lat_hist"])
+        st = self.run_chunk(st, traffic, measure)
+        h1 = np.asarray(st["lat_hist"])
+        hist = h1 - h0
+        return {"hist": hist, **percentiles(hist, (0.5, 0.99, 0.9999))}
+
+    def run_completion(self, traffic: Traffic, expected: int,
+                       chunk: int = 128, max_slots: int = 100_000,
+                       seed: int = 0, state: Optional[dict] = None) -> dict:
+        """Run until all ``expected`` packets are delivered (collectives)."""
+        st = state if state is not None else self.make_state(traffic, seed)
+        done_at = None
+        while int(st["slot"]) < max_slots:
+            st = self.run_chunk(st, traffic, chunk)
+            if int(st["ejected"]) >= expected:
+                done_at = int(st["slot"])
+                break
+        return {"slots": done_at or int(st["slot"]),
+                "completed": done_at is not None, "state": st}
+
+
+def percentiles(hist: np.ndarray, qs) -> dict:
+    total = hist.sum()
+    out = {}
+    if total == 0:
+        return {f"p{q}": float("nan") for q in qs}
+    cum = np.cumsum(hist)
+    for q in qs:
+        out[f"p{q}"] = int(np.searchsorted(cum, q * total) + 1)
+    return out

@@ -1,0 +1,66 @@
+"""Analytics: Eq. 1-3, Appendix A recurrences and thresholds."""
+import numpy as np
+import pytest
+
+from repro.core import (mrls, build_tables, exact_metrics,
+                        mrls_expected_A, prob_dstar_leq, dstar_thresholds,
+                        mrls_design, theta)
+
+
+def test_theta_formula():
+    assert theta(M=100, S=50, A=2.0) == 2.0
+
+
+def test_expected_A_matches_exact():
+    """Appendix A estimate vs measured A on real instances."""
+    for (n1, u, d, seed) in [(614, 18, 18, 1), (972, 24, 12, 0),
+                             (200, 8, 8, 3)]:
+        t = mrls(n1, u, d, seed=seed)
+        m = exact_metrics(t)
+        est = mrls_expected_A(n1, t.meta["n_spines"], u, u + d)
+        assert abs(est - m.A) / m.A < 0.05, (est, m.A)
+
+
+def test_theta_100k_table2():
+    """Θ estimates for the 100K configs (Table 2 column Θ)."""
+    cases = [(18, 18, 0.527), (24, 12, 1.048), (27, 9, 1.561)]
+    for u, d, want in cases:
+        n1 = 104976 // d
+        n2 = u * n1 // 36
+        A = mrls_expected_A(n1, n2, u, 36)
+        got = 2.0 * (u / d) / A
+        assert abs(got - want) / want < 0.05, (u, got, want)
+
+
+def test_dstar_thresholds_fig3():
+    """Fig. 3 boundaries: D* 3->4 near 2K endpoints, 4->5 near 30K,
+    and >= 100M endpoints supported at D=6 (D* <= 7)."""
+    th = dstar_thresholds(36, 1.0, k_max=7)
+    assert 1e3 < th[3] < 3e3
+    assert 2e4 < th[4] < 5e4
+    assert th[7] > 1e8
+
+
+def test_threshold_probability_matches_measured_diameter():
+    """P[D* <= k] should separate instances measured above/below."""
+    n1, u, d = 96, 18, 18            # ~1.7K endpoints, at the D*=3 boundary
+    R = u + d
+    n2 = u * n1 // R
+    p3 = prob_dstar_leq(n1, n2, u, R, 3)
+    assert 0.01 < p3 < 0.99          # genuinely in the transition window
+    measured = []
+    for seed in range(10):
+        t = mrls(n1, u, d, seed=seed)
+        tb = build_tables(t, full=True)
+        measured.append(tb.diameter_star <= 3)
+    frac = np.mean(measured)
+    assert abs(frac - p3) < 0.45     # coarse agreement (10 samples)
+
+
+def test_mrls_design_divisibility():
+    for S in (1000, 11052, 104976, 1_000_000):
+        for f in (1.0, 1.4, 2.0, 3.0):
+            n1, n2, u, d = mrls_design(S, 36, f)
+            assert (u * n1) % 36 == 0
+            tol = 0.10 if S <= 2000 else 0.02   # granularity ~ R*d endpoints
+            assert abs(n1 * d - S) / S < tol    # fine-grain scalability

@@ -1,0 +1,40 @@
+"""Collective traffic programs (Section 5.2.3)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collectives import (all2all_rounds, rabenseifner_phases,
+                                    all2all_lower_bound_slots)
+
+
+def test_all2all_rounds_cover_distinct_destinations():
+    S, R = 50, 10
+    d = all2all_rounds(S, R)
+    assert d.shape == (R, S)
+    for i in range(S):
+        dsts = d[:, i]
+        assert len(set(dsts.tolist())) == R        # no repeats
+        assert i not in dsts                       # never self
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(2, 10))
+def test_rabenseifner_structure(logn):
+    n = 1 << logn
+    phases = rabenseifner_phases(n, vec_packets=1 << logn)
+    assert len(phases) == 2 * logn
+    for ph in phases:
+        p = ph["partner"]
+        assert (p[p] == np.arange(n)).all()        # involution (pairing)
+        assert (p != np.arange(n)).all()
+        assert ph["packets"] >= 1
+    # reduce-scatter halves sizes; all-gather doubles back
+    rs = [ph["packets"] for ph in phases[:logn]]
+    ag = [ph["packets"] for ph in phases[logn:]]
+    assert all(a >= b for a, b in zip(rs, rs[1:]))
+    assert all(a <= b for a, b in zip(ag, ag[1:]))
+    assert rs == ag[::-1]
+
+
+def test_lower_bound_monotone_in_theta():
+    assert all2all_lower_bound_slots(100, 10, 0.5) > \
+        all2all_lower_bound_slots(100, 10, 1.0)

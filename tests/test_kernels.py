@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes in Python on CPU) + hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.minplus.kernel import minplus
+from repro.kernels.minplus.ref import minplus_ref, adjacency_matrix, all_pairs_ref
+from repro.kernels.minplus.ops import all_pairs_distances
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.selective_scan.kernel import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+# ---------------------------------------------------------------------- #
+# minplus
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (64, 64, 64, 32, 32, 32),
+    (100, 70, 130, 32, 128, 32),      # ragged -> padding path
+    (128, 256, 128, 128, 128, 128),
+    (8, 8, 8, 32, 32, 32),            # smaller than one block
+])
+def test_minplus_shapes(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0, 10, (m, k)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 10, (k, n)).astype(np.float32))
+    out = minplus(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(minplus_ref(a, b)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 60), k=st.integers(4, 60), n=st.integers(4, 60),
+       seed=st.integers(0, 5))
+def test_minplus_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0, 5, (m, k)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 5, (k, n)).astype(np.float32))
+    out = minplus(a, b, bm=32, bn=128, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(minplus_ref(a, b)),
+                               rtol=1e-6)
+
+
+def test_minplus_all_pairs_equals_bfs():
+    from repro.core import mrls, bfs_distances
+    t = mrls(20, u=3, d=3, seed=0)
+    d_kernel = np.asarray(all_pairs_distances(t.nbrs, interpret=True))
+    d_bfs = bfs_distances(t, np.arange(t.n_switches))
+    np.testing.assert_array_equal(d_kernel.astype(np.int32), d_bfs)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,H,Hkv,D,causal,dtype", [
+    (2, 256, 4, 2, 64, True, jnp.float32),
+    (1, 128, 8, 1, 64, True, jnp.float32),     # MQA
+    (2, 128, 4, 4, 128, False, jnp.float32),   # MHA bidirectional
+    (1, 256, 4, 2, 64, True, jnp.bfloat16),
+    (2, 192, 6, 3, 32, True, jnp.float32),     # non-pow2 seq (bq=64)
+])
+def test_flash_attention_shapes(B, S, H, Hkv, D, causal, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_reference():
+    """Kernel agrees with the model's chunked online-softmax core."""
+    from repro.models.attention import attention_core
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 128, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 64)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    b = attention_core(q, k, v, causal=True, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------- #
+# selective scan
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,T,Di,N,bd", [
+    (2, 32, 64, 16, 32),
+    (1, 64, 128, 16, 64),
+    (3, 16, 32, 8, 32),
+])
+def test_selective_scan_shapes(B, T, Di, N, bd):
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(B, T, Di)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, T, Di)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (Di, N)).astype(np.float32))
+    Bc = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    Cc = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    h0 = jnp.asarray(rng.normal(size=(B, Di, N)).astype(np.float32))
+    y, h = selective_scan(u, dt, A, Bc, Cc, h0, bd=bd, interpret=True)
+    for i in range(B):
+        yr, hr = selective_scan_ref(u[i], dt[i], A, Bc[i], Cc[i], h0[i])
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h[i]), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_selective_scan_matches_model_ssm():
+    """Kernel chunk == the model's associative-scan chunk decomposition."""
+    from repro.models.ssm import ssm_prefill
+    # indirect check: associativity — scanning in 2 chunks == 1 chunk
+    rng = np.random.default_rng(2)
+    B, T, Di, N = 1, 32, 16, 8
+    u = jnp.asarray(rng.normal(size=(B, T, Di)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (B, T, Di)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (Di, N)).astype(np.float32))
+    Bc = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    Cc = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    y1, h1 = selective_scan(u, dt, A, Bc, Cc, h0, bd=16, interpret=True)
+    ya, ha = selective_scan(u[:, :16], dt[:, :16], A, Bc[:, :16], Cc[:, :16],
+                            h0, bd=16, interpret=True)
+    yb, hb = selective_scan(u[:, 16:], dt[:, 16:], A, Bc[:, 16:], Cc[:, 16:],
+                            ha, bd=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1),
+                               np.concatenate([ya, yb], axis=1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(hb), rtol=1e-5)

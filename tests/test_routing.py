@@ -1,0 +1,103 @@
+"""Routing: BFS correctness, Polarized Theorem 4.2 bound, deroutes."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (mrls, oft, fat_tree, build_tables, bfs_distances,
+                        route_packet_host, find_corners)
+
+
+def _to_nx(topo):
+    g = nx.Graph()
+    g.add_nodes_from(range(topo.n_switches))
+    c, p = np.nonzero(topo.nbrs >= 0)
+    for a, b in zip(c, topo.nbrs[c, p]):
+        g.add_edge(int(a), int(b))
+    return g
+
+
+def test_bfs_matches_networkx():
+    t = mrls(30, u=4, d=4, seed=3)
+    g = _to_nx(t)
+    dist = bfs_distances(t, t.leaf_ids)
+    for i, src in enumerate(t.leaf_ids[:6]):
+        ref = nx.single_source_shortest_path_length(g, int(src))
+        for node, d in ref.items():
+            assert dist[i, node] == d
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_polarized_bound_theorem_4_2(seed):
+    """Route length <= 2 D* - 2 (Theorem 4.2) and no corners."""
+    t = mrls(40, u=5, d=5, seed=seed)
+    tb = build_tables(t, full=True)
+    bound = 2 * tb.diameter_star - 2
+    rng = np.random.default_rng(seed)
+    leaves = t.leaf_ids
+    for _ in range(30):
+        a, b = rng.choice(leaves, 2, replace=False)
+        path = route_packet_host(tb, int(a), int(b), "polarized",
+                                 max_hops=bound, rng=rng)
+        assert len(path) - 1 <= bound
+        assert path[0] == a and path[-1] == b
+
+
+def test_no_corners_on_paper_mrls():
+    t = mrls(614, u=18, d=18, seed=1)
+    tb = build_tables(t)
+    assert find_corners(tb, n_samples=300) == 0
+
+
+def test_polarized_routes_alternate_updown():
+    """Routes follow the [Up-Down]* structure of Section 4.3."""
+    t = mrls(40, u=5, d=5, seed=0)
+    tb = build_tables(t)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        a, b = rng.choice(t.leaf_ids, 2, replace=False)
+        path = route_packet_host(tb, int(a), int(b), "polarized", rng=rng)
+        levels = [int(t.level[s]) for s in path]
+        assert levels[0] == 0 and levels[-1] == 0
+        for x, y in zip(levels, levels[1:]):
+            assert x != y                 # bipartite: always level change
+
+
+def test_polarized_deroutes_around_congestion():
+    t = oft(5)
+    tb = build_tables(t)
+    rng = np.random.default_rng(0)
+    p0 = route_packet_host(tb, 0, 7, "polarized", max_hops=6, rng=rng)
+    assert len(p0) - 1 == 2               # minimal through the shared spine
+    occ = np.zeros_like(t.nbrs, float)
+    occ[0, list(t.nbrs[0]).index(p0[1])] = 100.0
+    p1 = route_packet_host(tb, 0, 7, "polarized", max_hops=6,
+                           occupancy=occ, rng=rng)
+    assert len(p1) - 1 == 4               # expansion + contraction deroute
+    assert p1[1] != p0[1]
+
+
+def test_minimal_adaptive_on_fat_tree():
+    t = fat_tree(8, 2)
+    tb = build_tables(t)
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        a, b = rng.choice(t.leaf_ids, 2, replace=False)
+        path = route_packet_host(tb, int(a), int(b), "minimal_adaptive",
+                                 rng=rng)
+        assert len(path) - 1 == tb.dist_leaf[tb.leaf_rank[a], b]
+
+
+def test_ksp_randomizes_paths():
+    t = mrls(60, u=6, d=6, seed=2)
+    tb = build_tables(t)
+    rng = np.random.default_rng(0)
+    total_paths, pairs = 0, 0
+    for i in range(10):
+        a, b = (int(x) for x in rng.choice(t.leaf_ids, 2, replace=False))
+        paths = {tuple(route_packet_host(tb, a, b, "ksp", rng=rng))
+                 for _ in range(12)}
+        total_paths += len(paths)
+        pairs += 1
+    assert total_paths > pairs            # randomization across equal paths

@@ -1,0 +1,87 @@
+"""Simulator: conservation, saturation behaviour, collectives, latency."""
+import numpy as np
+import pytest
+
+from repro.core import mrls, oft, fat_tree, build_tables
+from repro.core.collectives import rabenseifner_phases
+from repro.simulator.engine import Simulator, SimConfig, Traffic
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    t = mrls(14, u=3, d=3, seed=0)
+    return Simulator(build_tables(t), SimConfig(policy="polarized",
+                                                max_hops=10, pool=4096))
+
+
+def test_packet_conservation(tiny):
+    r = tiny.run_throughput(Traffic("uniform", load=0.8), warm=100,
+                            measure=150)
+    st = r["state"]
+    in_flight = int((~np.asarray(st["p_free"])).sum())
+    assert int(st["created"]) == int(st["ejected"]) + in_flight
+
+
+def test_throughput_tracks_offered_below_saturation(tiny):
+    r = tiny.run_throughput(Traffic("uniform", load=0.25), warm=150,
+                            measure=300)
+    assert abs(r["throughput"] - 0.25) < 0.03
+
+
+def test_saturation_below_capacity_limit(tiny):
+    r = tiny.run_throughput(Traffic("uniform", load=1.0), warm=200,
+                            measure=300)
+    assert 0.45 < r["throughput"] <= 0.90   # Θ = 0.867 for this instance
+
+
+def test_polarized_beats_minimal_under_rsp():
+    t = oft(5)
+    tb = build_tables(t)
+    pol = Simulator(tb, SimConfig(policy="polarized", max_hops=6, pool=16384))
+    mini = Simulator(tb, SimConfig(policy="minimal_adaptive", max_hops=6,
+                                   pool=16384))
+    tr = Traffic("rsp", load=1.0)
+    rp = pol.run_throughput(tr, warm=250, measure=250)
+    rm = mini.run_throughput(tr, warm=250, measure=250)
+    assert rp["throughput"] > 1.5 * rm["throughput"]   # paper: deroutes win
+
+
+def test_all2all_completes(tiny):
+    rounds = 6
+    S = tiny.S
+    r = tiny.run_completion(Traffic("all2all", rounds=rounds),
+                            expected=S * rounds, max_slots=4000)
+    assert r["completed"]
+    assert r["slots"] >= rounds          # at least one slot per round
+
+
+def test_rabenseifner_phases_on_sim():
+    t = mrls(14, u=3, d=3, seed=0)
+    sim = Simulator(build_tables(t), SimConfig(policy="polarized",
+                                               max_hops=10, pool=4096))
+    n = 32                                # ranks = endpoints subset (2^5)
+    phases = rabenseifner_phases(n, vec_packets=8)
+    total_slots = 0
+    st = None
+    for ph in phases:
+        tr = Traffic("phase", phase_packets=ph["packets"])
+        state = sim.make_state(tr)
+        partner = np.arange(sim.S, dtype=np.int32)   # self = no-op beyond n
+        partner[:n] = ph["partner"]
+        state["partner"] = np.asarray(partner)
+        expected = int((partner[:n] != np.arange(n)).sum()) * ph["packets"]
+        r = sim.run_completion(tr, expected=expected, max_slots=3000,
+                               state=state)
+        assert r["completed"]
+        total_slots += r["slots"]
+    assert total_slots > 0
+
+
+def test_latency_percentiles_reasonable():
+    t = fat_tree(8, 1)
+    sim = Simulator(build_tables(t), SimConfig(policy="minimal_adaptive",
+                                               max_hops=4, pool=8192))
+    r = sim.run_latency(Traffic("mice_elephant", load=0.4), warm=150,
+                        measure=400)
+    assert 2 <= r["p0.5"] <= 40
+    assert r["p0.5"] <= r["p0.99"] <= r["p0.9999"]

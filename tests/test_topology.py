@@ -1,0 +1,102 @@
+"""Topology builders: paper Table 2 parameters + structural invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (mrls, oft, fat_tree, dragonfly, dragonfly_plus, rfc,
+                        exact_metrics, build_tables)
+
+
+def test_mrls_table2_11k():
+    t = mrls(614, u=18, d=18, seed=1)
+    m = exact_metrics(t)
+    assert m.S == 11052
+    assert abs(m.cost_links - 1.0) < 1e-9
+    assert abs(m.cost_switches - 0.083) < 1e-3
+    assert m.D == 4                      # paper: diameter 4
+    assert abs(m.theta - 0.748) < 0.02   # paper: Θ = 0.748
+
+
+def test_mrls_cost2_11664():
+    t = mrls(972, u=24, d=12, seed=0)
+    m = exact_metrics(t)
+    assert m.S == 11664
+    assert abs(m.cost_links - 2.0) < 1e-9
+    assert abs(m.theta - 1.420) < 0.05   # paper: Θ = 1.420
+
+
+def test_oft_q17_matches_paper():
+    t = oft(17)
+    m = exact_metrics(t, full=True)
+    assert m.S == 11052
+    assert m.D == 2 and m.D_star == 3    # paper: D=2, D*=3
+    assert abs(m.theta - 1.0) < 1e-6
+    assert abs(m.cost_links - 1.0) < 1e-9
+
+
+def test_fat_tree_full():
+    t = fat_tree(36, 2)
+    m = exact_metrics(t)
+    assert m.S == 11664                  # 2 (R/2)^{h+1}
+    assert m.D == 4
+    assert abs(m.cost_links - 2.0) < 1e-9
+    assert abs(m.cost_switches - 0.139) < 1e-3
+
+
+def test_fat_tree_depopulated_100k():
+    t = fat_tree(36, 3, a1=18)           # 50% populated 4-level FT
+    m = exact_metrics(t)
+    assert m.S == 104976
+    assert m.D == 6
+    assert abs(m.cost_links - 3.0) < 1e-9
+    assert abs(m.cost_switches - 0.222) < 1e-3
+
+
+def test_dragonfly_paper_size():
+    t = dragonfly(a=16, p=8, h=8)
+    m = exact_metrics(t)
+    assert m.S == 16512                  # paper: DF(32, 16512), 129 groups
+    assert t.meta["g"] == 129
+    assert m.D <= 3
+    assert abs(m.cost_links - 1.4375) < 0.01   # ~1.5 in the paper
+
+
+def test_dragonfly_plus_paper_size():
+    t = dragonfly_plus(65, 16, 16, 16, 16)
+    m = exact_metrics(t)
+    assert m.S == 16640                  # paper: DF+(32, 16640), 65 groups
+    assert m.D == 3                      # leaf-spine-spine-leaf
+
+
+def test_rfc_is_updown_connected():
+    t = rfc(64, u=12, d=12, seed=0)
+    tb = build_tables(t)
+    assert tb.diameter_leaf <= 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(n1=st.integers(8, 80), u=st.integers(3, 12), d=st.integers(2, 8),
+       seed=st.integers(0, 10))
+def test_mrls_structure_property(n1, u, d, seed):
+    R = u + d
+    if (u * n1) % R or (u * n1) // R < 2:
+        return
+    t = mrls(n1, u, d, seed=seed)
+    t.validate()                          # reciprocity etc.
+    deg = t.degrees
+    assert (deg[t.is_leaf] == u).all()    # leaves: exactly u uplinks
+    assert (deg[~t.is_leaf] == R).all()   # spines: full radix
+    assert t.n_endpoints == n1 * d
+
+
+@settings(max_examples=8, deadline=None)
+@given(q=st.sampled_from([2, 3, 5, 7, 11]))
+def test_oft_property(q):
+    t = oft(q)
+    t.validate()
+    m = q * q + q + 1
+    assert t.n_leaves == 2 * m
+    assert (t.degrees[t.is_leaf] == q + 1).all()
+    assert (t.degrees[~t.is_leaf] == 2 * (q + 1)).all()
+    tb = build_tables(t)
+    assert tb.diameter_leaf == 2          # any two leaves share a spine
