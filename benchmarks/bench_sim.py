@@ -1,68 +1,61 @@
-"""Shared simulator-benchmark driver for Figs. 5/6/7.
+"""Shared simulator-benchmark driver for Figs. 5/6/7 — on ``repro.api``.
 
-Default is a structurally-matched *scaled* family (radix 12 instead of 36 —
-same topology classes, same cost ratios, CPU-tractable); ``--full`` builds
-the paper's exact sizes (11K/16K/100K endpoints — hours of CPU; used for
-the headline numbers in EXPERIMENTS.md §Repro).
+Each scenario is a :class:`NetworkSpec` + routing knobs; the whole
+pipeline (topology build, table construction, simulator lifetime,
+collective phase orchestration) runs through the declarative facade.
+One :class:`SimulatorCache` per scenario keeps the ~7 experiments on the
+same compiled simulator and performs the cache-clearing teardown that
+this file used to do by hand (``del sim; jax.clear_caches()`` — ~25
+simulator instances per suite OOM the host otherwise).
+
+Default is a structurally-matched *scaled* family (radix 12 instead of
+36 — same topology classes, same cost ratios, CPU-tractable); ``--full``
+builds the paper's exact sizes (11K/16K/100K endpoints — hours of CPU;
+used for the headline numbers in EXPERIMENTS.md §Repro).
 """
 import sys
 
 sys.path.insert(0, "src")
 
-import jax
-import numpy as np
-
-from repro.core import build_tables
-from repro.core.collectives import rabenseifner_phases
-from repro.simulator.engine import Simulator, SimConfig, Traffic
+from repro.api import (Experiment, NetworkSpec, RouteSpec, SimulatorCache,
+                       WorkloadSpec, run)
 from benchmarks.common import emit, timed
 
 PATTERNS = ("uniform", "rep", "rsp", "bu")
 
 
-def run_scenario(name: str, topo, policy: str, max_hops: int,
+def run_scenario(name: str, net: NetworkSpec, policy: str, max_hops: int,
                  warm: int, measure: int, a2a_rounds: int,
                  allreduce_ranks: int, vec_packets: int = 16,
                  patterns=PATTERNS, pool=None):
-    tables = build_tables(topo)
-    sim = Simulator(tables, SimConfig(policy=policy, vcs=4,
-                                      max_hops=max_hops, pool=pool))
-    # throughput at max injection
-    for pat in patterns:
-        r, us = timed(lambda: sim.run_throughput(
-            Traffic(pat, load=1.0), warm=warm, measure=measure))
-        emit(f"{name}.thpt.{pat}", us,
-             f"L={r['throughput']:.3f}|hops={r['avg_hops']:.2f}")
-    # tail latency under mice/elephant at 0.5 load
-    r, us = timed(lambda: sim.run_latency(
-        Traffic("mice_elephant", load=0.5), warm=warm, measure=measure))
-    emit(f"{name}.lat.mice_elephant", us,
-         f"p50={r['p0.5']}|p99={r['p0.99']}|p9999={r['p0.9999']}")
-    # All2All completion (chunk=16 -> 16-slot completion resolution)
-    S = sim.S
-    r, us = timed(lambda: sim.run_completion(
-        Traffic("all2all", rounds=a2a_rounds), expected=S * a2a_rounds,
-        chunk=16, max_slots=60_000))
-    emit(f"{name}.all2all", us,
-         f"slots={r['slots']}|completed={r['completed']}")
-    # Rabenseifner Allreduce (power-of-two ranks mapped onto endpoints)
-    n = allreduce_ranks
-    total = 0
-    ok = True
-    for ph in rabenseifner_phases(n, vec_packets):
-        tr = Traffic("phase", phase_packets=ph["packets"])
-        st = sim.make_state(tr)
-        partner = np.arange(sim.S, dtype=np.int32)
-        partner[:n] = ph["partner"]
-        st["partner"] = np.asarray(partner)
-        expected = int((partner[:n] != np.arange(n)).sum()) * ph["packets"]
-        res = sim.run_completion(tr, expected=expected, chunk=16,
-                                 max_slots=30_000, state=st)
-        ok &= res["completed"]
-        total += res["slots"]
-    emit(f"{name}.allreduce", 0.0, f"slots={total}|completed={ok}")
-    # ~25 simulator instances per suite: drop compiled steps or the single
-    # 35 GB host OOMs at the tail (observed: LLVM "Cannot allocate memory").
-    del sim
-    jax.clear_caches()
-    return None
+    route = RouteSpec(policy=policy, vcs=4, max_hops=max_hops, pool=pool)
+
+    def exp(workload, **kw):
+        return Experiment(network=net, route=route, workload=workload,
+                          warm=warm, measure=measure, **kw)
+
+    with SimulatorCache() as cache:
+        # throughput at max injection
+        for pat in patterns:
+            r, us = timed(lambda: run(exp(WorkloadSpec(pat, load=1.0)),
+                                      cache=cache))
+            emit(f"{name}.thpt.{pat}", us,
+                 f"L={r.throughput:.3f}|hops={r.avg_hops:.2f}")
+        # tail latency under mice/elephant at 0.5 load
+        r, us = timed(lambda: run(
+            exp(WorkloadSpec("mice_elephant", load=0.5), metric="latency"),
+            cache=cache))
+        emit(f"{name}.lat.mice_elephant", us,
+             f"p50={r.latency['p50']}|p99={r.latency['p99']}"
+             f"|p9999={r.latency['p9999']}")
+        # All2All completion (chunk=16 -> 16-slot completion resolution)
+        r, us = timed(lambda: run(
+            exp(WorkloadSpec("all2all", rounds=a2a_rounds), max_slots=60_000),
+            cache=cache))
+        emit(f"{name}.all2all", us, f"slots={r.slots}|completed={r.completed}")
+        # Rabenseifner Allreduce (power-of-two ranks mapped onto endpoints)
+        r = run(exp(WorkloadSpec("allreduce", ranks=allreduce_ranks,
+                                 vec_packets=vec_packets),
+                    max_slots=30_000), cache=cache)
+        emit(f"{name}.allreduce", 0.0,
+             f"slots={r.slots}|completed={r.completed}")

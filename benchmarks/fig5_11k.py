@@ -2,14 +2,20 @@
 
 OFT vs cost-matched MRLS (Polarized AND KSP) vs FT vs cost-1.4/2.0 MRLS.
 Scaled default: radix 12, ~400 endpoints, same cost ratios.  ``--full``
-builds the paper's exact 11K networks.
+builds the paper's exact 11K networks.  Scenarios are pure spec
+declarations; execution goes through ``repro.api``.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import mrls, oft, fat_tree
+from repro.api import NetworkSpec
 from benchmarks.bench_sim import run_scenario
+
+
+def _mrls(n_leaves, u, d):
+    return NetworkSpec("mrls", {"n_leaves": n_leaves, "u": u, "d": d,
+                                "seed": 1})
 
 
 def main(full: bool = False):
@@ -17,26 +23,28 @@ def main(full: bool = False):
           f"({'FULL paper size' if full else 'scaled radix-12 family'})")
     if full:
         scen = [
-            ("fig5.oft_q17.pol", oft(17), "polarized", 6),
-            ("fig5.mrls_u18.pol", mrls(614, 18, 18, seed=1), "polarized", 6),
-            ("fig5.mrls_u18.ksp", mrls(614, 18, 18, seed=1), "ksp", 4),
-            ("fig5.mrls_u21.pol", mrls(744, 21, 15, seed=1), "polarized", 6),
-            ("fig5.mrls_u24.pol", mrls(972, 24, 12, seed=1), "polarized", 6),
-            ("fig5.ft_h2.min", fat_tree(36, 2), "minimal_adaptive", 4),
+            ("fig5.oft_q17.pol", NetworkSpec("oft", {"q": 17}), "polarized", 6),
+            ("fig5.mrls_u18.pol", _mrls(614, 18, 18), "polarized", 6),
+            ("fig5.mrls_u18.ksp", _mrls(614, 18, 18), "ksp", 4),
+            ("fig5.mrls_u21.pol", _mrls(744, 21, 15), "polarized", 6),
+            ("fig5.mrls_u24.pol", _mrls(972, 24, 12), "polarized", 6),
+            ("fig5.ft_h2.min", NetworkSpec("fat_tree", {"radix": 36, "h": 2}),
+             "minimal_adaptive", 4),
         ]
         warm, measure, rounds, ranks = 300, 300, 24, 8192
     else:
         scen = [
-            ("fig5.oft_q5.pol", oft(5), "polarized", 6),
-            ("fig5.mrls_u6.pol", mrls(62, 6, 6, seed=1), "polarized", 8),
-            ("fig5.mrls_u6.ksp", mrls(62, 6, 6, seed=1), "ksp", 6),
-            ("fig5.mrls_u7.pol", mrls(84, 7, 5, seed=1), "polarized", 8),
-            ("fig5.mrls_u8.pol", mrls(108, 8, 4, seed=1), "polarized", 8),
-            ("fig5.ft_h2.min", fat_tree(12, 2), "minimal_adaptive", 4),
+            ("fig5.oft_q5.pol", NetworkSpec("oft", {"q": 5}), "polarized", 6),
+            ("fig5.mrls_u6.pol", _mrls(62, 6, 6), "polarized", 8),
+            ("fig5.mrls_u6.ksp", _mrls(62, 6, 6), "ksp", 6),
+            ("fig5.mrls_u7.pol", _mrls(84, 7, 5), "polarized", 8),
+            ("fig5.mrls_u8.pol", _mrls(108, 8, 4), "polarized", 8),
+            ("fig5.ft_h2.min", NetworkSpec("fat_tree", {"radix": 12, "h": 2}),
+             "minimal_adaptive", 4),
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 256
-    for name, topo, policy, hops in scen:
-        run_scenario(name, topo, policy, hops, warm, measure, rounds, ranks)
+    for name, net, policy, hops in scen:
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,19 @@
 """Figure 6: 100K-endpoint scale — depopulated 4-level FT vs MRLS at
 f = 1 / 2 / 3.  Scaled default: radix 12 (1296 endpoints, same ratios);
-``--full`` builds the exact 104976-endpoint networks (CPU-hours)."""
+``--full`` builds the exact 104976-endpoint networks (CPU-hours).
+Scenarios are pure spec declarations; execution goes through
+``repro.api``."""
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import mrls, fat_tree
+from repro.api import NetworkSpec
 from benchmarks.bench_sim import run_scenario
+
+
+def _mrls(n_leaves, u, d):
+    return NetworkSpec("mrls", {"n_leaves": n_leaves, "u": u, "d": d,
+                                "seed": 1})
 
 
 def main(full: bool = False):
@@ -14,22 +21,26 @@ def main(full: bool = False):
           f"({'FULL paper size' if full else 'scaled radix-12 family'})")
     if full:
         scen = [
-            ("fig6.ft50.min", fat_tree(36, 3, a1=18), "minimal_adaptive", 6),
-            ("fig6.mrls_f1.pol", mrls(5832, 18, 18, seed=1), "polarized", 8),
-            ("fig6.mrls_f2.pol", mrls(8748, 24, 12, seed=1), "polarized", 8),
-            ("fig6.mrls_f3.pol", mrls(11664, 27, 9, seed=1), "polarized", 8),
+            ("fig6.ft50.min",
+             NetworkSpec("fat_tree", {"radix": 36, "h": 3, "a1": 18}),
+             "minimal_adaptive", 6),
+            ("fig6.mrls_f1.pol", _mrls(5832, 18, 18), "polarized", 8),
+            ("fig6.mrls_f2.pol", _mrls(8748, 24, 12), "polarized", 8),
+            ("fig6.mrls_f3.pol", _mrls(11664, 27, 9), "polarized", 8),
         ]
         warm, measure, rounds, ranks = 300, 300, 16, 65536
     else:
         scen = [
-            ("fig6.ft50.min", fat_tree(12, 3, a1=6), "minimal_adaptive", 6),
-            ("fig6.mrls_f1.pol", mrls(216, 6, 6, seed=1), "polarized", 8),
-            ("fig6.mrls_f2.pol", mrls(324, 8, 4, seed=1), "polarized", 8),
-            ("fig6.mrls_f3.pol", mrls(432, 9, 3, seed=1), "polarized", 8),
+            ("fig6.ft50.min",
+             NetworkSpec("fat_tree", {"radix": 12, "h": 3, "a1": 6}),
+             "minimal_adaptive", 6),
+            ("fig6.mrls_f1.pol", _mrls(216, 6, 6), "polarized", 8),
+            ("fig6.mrls_f2.pol", _mrls(324, 8, 4), "polarized", 8),
+            ("fig6.mrls_f3.pol", _mrls(432, 9, 3), "polarized", 8),
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 1024
-    for name, topo, policy, hops in scen:
-        run_scenario(name, topo, policy, hops, warm, measure, rounds, ranks)
+    for name, net, policy, hops in scen:
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
 
 
 if __name__ == "__main__":

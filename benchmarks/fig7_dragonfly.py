@@ -1,12 +1,19 @@
 """Figure 7: MRLS vs Dragonfly / Dragonfly+ at 16K endpoints and
 Cost_links <= 1.5.  Scaled default: ~400-endpoint family; ``--full``
-builds DF(32,16512)/DF+(32,16640)/MRLS(32,16640)."""
+builds DF(32,16512)/DF+(32,16640)/MRLS(32,16640).  Scenarios are pure
+spec declarations; execution goes through ``repro.api``."""
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import mrls, dragonfly, dragonfly_plus
+from repro.api import NetworkSpec
 from benchmarks.bench_sim import run_scenario
+
+
+def _dfp(n_groups, lpg, spg, p, gps):
+    return NetworkSpec("dragonfly_plus", {
+        "n_groups": n_groups, "leaves_per_group": lpg,
+        "spines_per_group": spg, "p": p, "global_per_spine": gps})
 
 
 def main(full: bool = False):
@@ -14,21 +21,26 @@ def main(full: bool = False):
           f"({'FULL paper size' if full else 'scaled family'})")
     if full:
         scen = [
-            ("fig7.df.ugal", dragonfly(16, 8, 8), "ugal", 6),
-            ("fig7.dfplus.ugal", dragonfly_plus(65, 16, 16, 16, 16),
-             "ugal", 6),
-            ("fig7.mrls_u19.pol", mrls(1280, 19, 13, seed=1), "polarized", 8),
+            ("fig7.df.ugal",
+             NetworkSpec("dragonfly", {"a": 16, "p": 8, "h": 8}), "ugal", 6),
+            ("fig7.dfplus.ugal", _dfp(65, 16, 16, 16, 16), "ugal", 6),
+            ("fig7.mrls_u19.pol",
+             NetworkSpec("mrls", {"n_leaves": 1280, "u": 19, "d": 13,
+                                  "seed": 1}), "polarized", 8),
         ]
         warm, measure, rounds, ranks = 300, 300, 16, 16384
     else:
         scen = [
-            ("fig7.df.ugal", dragonfly(6, 3, 3), "ugal", 6),
-            ("fig7.dfplus.ugal", dragonfly_plus(13, 6, 6, 6, 6), "ugal", 6),
-            ("fig7.mrls_u7.pol", mrls(96, 7, 5, seed=1), "polarized", 8),
+            ("fig7.df.ugal",
+             NetworkSpec("dragonfly", {"a": 6, "p": 3, "h": 3}), "ugal", 6),
+            ("fig7.dfplus.ugal", _dfp(13, 6, 6, 6, 6), "ugal", 6),
+            ("fig7.mrls_u7.pol",
+             NetworkSpec("mrls", {"n_leaves": 96, "u": 7, "d": 5,
+                                  "seed": 1}), "polarized", 8),
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 256
-    for name, topo, policy, hops in scen:
-        run_scenario(name, topo, policy, hops, warm, measure, rounds, ranks)
+    for name, net, policy, hops in scen:
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
 
 
 if __name__ == "__main__":

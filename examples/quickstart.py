@@ -2,7 +2,8 @@
 
 1. Build an MRLS, check Table-2-style metrics (Θ, costs, diameter).
 2. Route a packet with Polarized routing (Theorem 4.2 bound).
-3. Simulate uniform traffic and an All2All collective.
+3. Simulate uniform traffic and an All2All collective — declaratively,
+   through ``repro.api`` (spec in, structured result out).
 4. Spin a tiny LM from the framework and take one training step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,36 +13,42 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (mrls, exact_metrics, build_tables, route_packet_host)
-from repro.simulator.engine import Simulator, SimConfig, Traffic
+from repro.core import exact_metrics, route_packet_host
+from repro.api import (Experiment, NetworkSpec, RouteSpec, SimulatorCache,
+                       WorkloadSpec, routing_tables, run)
 
 # 1. an MRLS with 11052 endpoints — the paper's Table 2 headline row
-topo = mrls(n_leaves=614, u=18, d=18, seed=1)
-m = exact_metrics(topo)
+big = NetworkSpec("mrls", {"n_leaves": 614, "u": 18, "d": 18, "seed": 1})
+tables = routing_tables(big)
+m = exact_metrics(tables.topo)
 print(f"{m.name}: S={m.S} D={m.D} Θ={m.theta:.3f} "
       f"cost={m.cost_links:.1f} links/endpoint   (paper: Θ=0.748)")
 
 # 2. Polarized routing between two leaves
-tables = build_tables(topo)
 rng = np.random.default_rng(0)
-a, b = (int(x) for x in rng.choice(topo.leaf_ids, 2, replace=False))
+a, b = (int(x) for x in rng.choice(tables.topo.leaf_ids, 2, replace=False))
 path = route_packet_host(tables, a, b, "polarized", max_hops=8, rng=rng)
 print(f"polarized route {a}->{b}: {path}  (bound 2D*-2 = "
       f"{2 * tables.diameter_star - 2})")
 
-# 3. simulate — small instance so this runs in seconds
-small = mrls(62, 6, 6, seed=1)
-sim = Simulator(build_tables(small), SimConfig(policy="polarized",
-                                               max_hops=8))
-r = sim.run_throughput(Traffic("uniform", load=1.0), warm=150, measure=200)
-print(f"uniform saturation throughput: {r['throughput']:.3f} flits/cycle "
-      f"(Θ={exact_metrics(small).theta:.3f})")
-r = sim.run_completion(Traffic("all2all", rounds=8),
-                       expected=small.n_endpoints * 8)
-print(f"All2All (8 rounds): {r['slots']} slots")
+# 3. simulate — small instance so this runs in seconds; the Experiment
+#    spec replaces the old Simulator/SimConfig/Traffic hand-wiring and
+#    JSON round-trips (try: python -m repro.api run <spec.json>)
+small = NetworkSpec("mrls", {"n_leaves": 62, "u": 6, "d": 6, "seed": 1})
+route = RouteSpec(policy="polarized", max_hops=8)
+with SimulatorCache() as cache:  # both runs share one compiled simulator
+    r = run(Experiment(network=small, route=route,
+                       workload=WorkloadSpec("uniform", load=1.0),
+                       warm=150, measure=200), cache=cache)
+    small_topo = cache.get(small, route).tables.topo
+    print(f"uniform saturation throughput: {r.throughput:.3f} flits/cycle "
+          f"(Θ={exact_metrics(small_topo).theta:.3f})")
+    r = run(Experiment(network=small, route=route,
+                       workload=WorkloadSpec("all2all", rounds=8)),
+            cache=cache)
+    print(f"All2All (8 rounds): {r.slots} slots")
 
 # 4. one train step of a reduced framework model
 from repro.configs import REGISTRY, reduced

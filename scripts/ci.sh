@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + declarative-API smoke run.
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: repro.api CLI on a tiny spec =="
+python -m repro.api run examples/specs/tiny_mrls.json
+
+echo "CI OK"

@@ -1,0 +1,33 @@
+"""Version-compatibility polyfills for older installed jax (< 0.5).
+
+This codebase targets the modern surface (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``); the container pins jax
+0.4.37.  Importing this module backfills the missing attributes with
+behavior-equivalent fallbacks — gated on absence, so on a current jax it
+is a no-op.  Import it before touching those APIs (``repro.launch.mesh``,
+``repro.models.moe`` and ``repro.optim.compression`` all do).
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (re-exported)
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+if not hasattr(jax, "set_mesh"):  # pragma: no cover - depends on jax
+    # ``with jax.set_mesh(mesh):`` fallback: Mesh is itself a context
+    # manager with the semantics this codebase relies on (named axes
+    # visible to with_sharding_constraint / shard_map inside the block).
+    jax.set_mesh = lambda mesh: mesh
+
+if not hasattr(jax, "shard_map"):  # pragma: no cover - depends on jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kw = {} if check_vma is None else {"check_rep": check_vma}
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = _shard_map_compat

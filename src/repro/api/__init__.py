@@ -1,0 +1,37 @@
+"""Declarative experiment layer over the simulator stack.
+
+One import gives the whole pipeline::
+
+    from repro.api import Experiment, NetworkSpec, RouteSpec, WorkloadSpec, run
+
+    result = run(Experiment(
+        network=NetworkSpec("mrls", {"n_leaves": 62, "u": 6, "d": 6, "seed": 1}),
+        route=RouteSpec(policy="polarized", max_hops=8),
+        workload=WorkloadSpec("uniform", load=1.0),
+    ))
+    print(result.throughput)
+
+Specs are frozen + JSON round-trippable (``python -m repro.api run
+spec.json`` executes them from files), :func:`run` owns simulator
+lifetime, and :func:`sweep` expands cartesian axes while reusing
+compiled simulators across grid points that share a fabric.  The
+imperative layer (``repro.core``, ``repro.simulator``) stays importable
+underneath for custom drivers.
+"""
+from .specs import (
+    NetworkSpec, RouteSpec, WorkloadSpec, Experiment,
+    BERNOULLI_PATTERNS, COLLECTIVE_PATTERNS,
+)
+from .registry import register_topology, topology_families, build_network
+from .runner import (Result, SimulatorCache, open_simulator, routing_tables,
+                     run, run_all)
+from .sweep import expand_axes, sweep
+
+__all__ = [
+    "NetworkSpec", "RouteSpec", "WorkloadSpec", "Experiment",
+    "BERNOULLI_PATTERNS", "COLLECTIVE_PATTERNS",
+    "register_topology", "topology_families", "build_network",
+    "Result", "SimulatorCache", "open_simulator", "routing_tables", "run",
+    "run_all",
+    "expand_axes", "sweep",
+]

@@ -1,0 +1,102 @@
+"""``python -m repro.api`` — run experiment specs from JSON.
+
+Commands:
+
+* ``run <spec.json> [--out results.json]`` — spec file holds one
+  experiment object or ``{"experiments": [...]}``; simulators are shared
+  across experiments on the same fabric.
+* ``sweep <spec.json> [--out results.json]`` — spec file holds
+  ``{"base": <experiment>, "axes": {"workload.load": [0.2, 0.5], ...}}``.
+* ``families`` — list registered topology families.
+
+Each result prints as a one-line human summary on stderr-free stdout plus,
+with ``--out``, the full JSON records.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .runner import Result, run_all
+from .registry import topology_families
+from .specs import Experiment
+from .sweep import sweep
+
+__all__ = ["main"]
+
+
+def _summary(res: Result) -> str:
+    bits = [f"{res.name}", f"metric={res.metric}"]
+    if res.throughput is not None:
+        bits.append(f"throughput={res.throughput:.3f}")
+        bits.append(f"avg_hops={res.avg_hops:.2f}")
+    if res.latency is not None:
+        bits.append("lat " + "/".join(f"{k}={v}" for k, v in res.latency.items()))
+    if res.slots is not None:
+        bits.append(f"slots={res.slots}")
+        bits.append(f"completed={res.completed}")
+    return "  ".join(bits)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _emit(results: List[Result], out: Optional[str]) -> None:
+    for res in results:
+        print(_summary(res))
+    if out:
+        with open(out, "w") as f:
+            json.dump([r.to_dict() for r in results], f, indent=2)
+        print(f"wrote {len(results)} result(s) to {out}")
+
+
+def _cmd_run(args) -> int:
+    doc = _load(args.spec)
+    specs = doc["experiments"] if "experiments" in doc else [doc]
+    results = run_all(Experiment.from_dict(d) for d in specs)
+    _emit(results, args.out)
+    return 0
+
+
+def _cmd_sweep(args) -> int:
+    doc = _load(args.spec)
+    base = Experiment.from_dict(doc["base"])
+    results = sweep(base, doc.get("axes", {}))
+    _emit(results, args.out)
+    return 0
+
+
+def _cmd_families(_args) -> int:
+    for name in topology_families():
+        print(name)
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.api",
+                                     description=__doc__.splitlines()[0])
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p_run = sub.add_parser("run", help="run experiment spec(s) from JSON")
+    p_run.add_argument("spec", help="path to the experiment JSON file")
+    p_run.add_argument("--out", help="write full Result JSON records here")
+    p_run.set_defaults(fn=_cmd_run)
+
+    p_sweep = sub.add_parser("sweep", help="run a {base, axes} sweep spec")
+    p_sweep.add_argument("spec", help="path to the sweep JSON file")
+    p_sweep.add_argument("--out", help="write full Result JSON records here")
+    p_sweep.set_defaults(fn=_cmd_sweep)
+
+    p_fam = sub.add_parser("families", help="list topology families")
+    p_fam.set_defaults(fn=_cmd_families)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

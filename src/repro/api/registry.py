@@ -1,0 +1,40 @@
+"""String-keyed topology-builder registry.
+
+Seeds from :data:`repro.core.TOPOLOGY_BUILDERS` (the six paper families)
+and accepts user registrations, so downstream code can declare fabrics by
+name in JSON without importing builder functions.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..core import TOPOLOGY_BUILDERS
+from ..core.topology import Topology
+from .specs import NetworkSpec
+
+__all__ = ["register_topology", "topology_families", "build_network"]
+
+_REGISTRY: dict = dict(TOPOLOGY_BUILDERS)
+
+
+def register_topology(name: str, builder: Callable[..., Topology],
+                      *, overwrite: bool = False) -> None:
+    """Register ``builder`` under ``name`` for NetworkSpec resolution."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"topology family {name!r} already registered")
+    _REGISTRY[name] = builder
+
+
+def topology_families() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def build_network(spec: NetworkSpec) -> Topology:
+    """Resolve ``spec.family`` and build the topology from ``spec.params``."""
+    try:
+        builder = _REGISTRY[spec.family]
+    except KeyError:
+        raise KeyError(
+            f"unknown topology family {spec.family!r}; known: "
+            f"{topology_families()}") from None
+    return builder(**spec.param_dict())

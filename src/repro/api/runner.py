@@ -1,0 +1,265 @@
+"""One-call experiment execution: ``run(experiment) -> Result``.
+
+Owns the four-stage pipeline every driver used to hand-wire —
+topology builder -> ``build_tables`` -> ``Simulator(SimConfig)`` ->
+``Traffic`` — plus simulator lifetime (context-managed; teardown clears
+the jit caches that otherwise accumulate one executable per instance)
+and collective orchestration (Rabenseifner allreduce runs its phase
+schedule internally instead of callers patching ``st["partner"]``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+from typing import Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import build_tables
+from ..core.collectives import rabenseifner_phases
+from ..simulator.engine import Simulator, Traffic
+from .registry import build_network
+from .specs import Experiment, NetworkSpec, RouteSpec
+
+__all__ = ["Result", "SimulatorCache", "open_simulator", "routing_tables",
+           "run", "run_all"]
+
+
+def routing_tables(network: NetworkSpec, full: bool = False):
+    """Build the network and its precomputed routing tables in one call."""
+    return build_tables(build_network(network), full=full)
+
+
+# ---------------------------------------------------------------------- #
+# results
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """Structured record of one experiment run.
+
+    Only the fields relevant to ``metric`` are populated; the rest stay
+    ``None``.  ``latency`` maps percentile labels (``p50``/``p99``/
+    ``p9999``) to slot counts; ``phase_slots`` holds per-phase completion
+    slots for collectives with a phase schedule (allreduce).
+    """
+
+    experiment: Experiment
+    metric: str
+    throughput: Optional[float] = None
+    avg_hops: Optional[float] = None
+    ejected: Optional[int] = None
+    latency: Optional[Mapping[str, int]] = None
+    slots: Optional[int] = None
+    completed: Optional[bool] = None
+    phase_slots: Optional[Tuple[int, ...]] = None
+
+    @property
+    def name(self) -> str:
+        return self.experiment.label()
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["experiment"] = self.experiment.to_dict()
+        if self.latency is not None:
+            d["latency"] = dict(self.latency)
+        if self.phase_slots is not None:
+            d["phase_slots"] = list(self.phase_slots)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Result":
+        d = dict(d)
+        d["experiment"] = Experiment.from_dict(d["experiment"])
+        if d.get("phase_slots") is not None:
+            d["phase_slots"] = tuple(d["phase_slots"])
+        return cls(**d)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Result":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------- #
+# simulator lifetime
+# ---------------------------------------------------------------------- #
+def _make_simulator(network: NetworkSpec, route: RouteSpec) -> Simulator:
+    tables = build_tables(build_network(network))
+    return Simulator(tables, route.to_sim_config())
+
+
+class SimulatorCache:
+    """Compiled-simulator reuse across experiments.
+
+    Keyed on ``(NetworkSpec, RouteSpec)`` — both frozen and hashable — so
+    a sweep over loads/patterns/seeds on one fabric compiles once.  Also a
+    context manager: closing tears down every cached simulator (one cache
+    clear total, matching the old manual ``del sim; jax.clear_caches()``).
+    """
+
+    def __init__(self):
+        self._sims: dict = {}
+
+    def get(self, network: NetworkSpec, route: RouteSpec) -> Simulator:
+        key = (network, route)
+        sim = self._sims.get(key)
+        if sim is None:
+            sim = self._sims[key] = _make_simulator(network, route)
+        return sim
+
+    def __len__(self) -> int:
+        return len(self._sims)
+
+    def release(self, network: NetworkSpec, route: RouteSpec,
+                *, clear: Optional[bool] = None) -> None:
+        """Drop one simulator (no-op if absent) — for drivers that know a
+        fabric won't be needed again before the cache as a whole closes.
+
+        ``clear=None`` (default) clears the process-global jit cache only
+        when this was the last cached simulator: clearing while other
+        fabrics are still cached would evict their executables too and
+        force silent recompiles.
+        """
+        sim = self._sims.pop((network, route), None)
+        if sim is not None:
+            if clear is None:
+                clear = not self._sims
+            sim.close(clear=clear)
+
+    def close(self) -> None:
+        sims, self._sims = list(self._sims.values()), {}
+        for sim in sims:
+            sim.close(clear=False)
+        if sims:
+            jax.clear_caches()
+
+    def __enter__(self) -> "SimulatorCache":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+@contextlib.contextmanager
+def open_simulator(network: NetworkSpec, route: RouteSpec = RouteSpec()):
+    """Low-level escape hatch: a context-managed Simulator for a spec pair."""
+    sim = _make_simulator(network, route)
+    try:
+        yield sim
+    finally:
+        sim.close()
+
+
+# ---------------------------------------------------------------------- #
+# execution
+# ---------------------------------------------------------------------- #
+def _to_traffic(exp: Experiment) -> Traffic:
+    w = exp.workload
+    return Traffic(pattern=w.pattern, load=w.load, rounds=w.rounds,
+                   elephant_frac=w.elephant_frac,
+                   elephant_size=w.elephant_size)
+
+
+def _run_allreduce(sim: Simulator, exp: Experiment) -> Result:
+    n = exp.workload.ranks or 1 << (sim.S.bit_length() - 1)
+    if n > sim.S:
+        raise ValueError(f"allreduce ranks {n} > endpoints {sim.S}")
+    total, ok, per_phase = 0, True, []
+    for ph in rabenseifner_phases(n, exp.workload.vec_packets):
+        tr = Traffic("phase", phase_packets=ph["packets"])
+        st = sim.make_state(tr, seed=exp.seed)
+        partner = np.arange(sim.S, dtype=np.int32)
+        partner[:n] = ph["partner"]
+        st["partner"] = np.asarray(partner)
+        expected = int((partner[:n] != np.arange(n)).sum()) * ph["packets"]
+        r = sim.run_completion(tr, expected=expected, chunk=exp.chunk,
+                               max_slots=exp.max_slots, state=st)
+        ok &= r["completed"]
+        total += r["slots"]
+        per_phase.append(int(r["slots"]))
+    return Result(experiment=exp, metric="completion", slots=total,
+                  completed=ok, phase_slots=tuple(per_phase))
+
+
+def run(experiment: Experiment, *,
+        cache: Optional[SimulatorCache] = None) -> Result:
+    """Execute ``experiment`` end to end and return a :class:`Result`.
+
+    With ``cache`` given, the compiled simulator is fetched from / stored
+    into it and left open; otherwise a private simulator is built and
+    closed before returning.
+    """
+    owns = cache is None
+    sim = (_make_simulator(experiment.network, experiment.route) if owns
+           else cache.get(experiment.network, experiment.route))
+    try:
+        return _run_on(sim, experiment)
+    finally:
+        if owns:
+            sim.close()
+
+
+def run_all(experiments, *,
+            cache: Optional[SimulatorCache] = None) -> list:
+    """Run a sequence of experiments, sharing simulators across same-fabric
+    entries.  With a private cache (none passed in), each fabric's simulator
+    is evicted right after its last use so multi-fabric suites don't
+    accumulate ~25 live instances (the documented host-OOM mode)."""
+    experiments = list(experiments)
+    owns = cache is None
+    if owns:
+        cache = SimulatorCache()
+    last_use = {(e.network, e.route): i for i, e in enumerate(experiments)}
+    results = []
+    try:
+        for i, exp in enumerate(experiments):
+            results.append(run(exp, cache=cache))
+            if owns and last_use[(exp.network, exp.route)] == i:
+                cache.release(exp.network, exp.route)
+        return results
+    finally:
+        if owns:
+            cache.close()
+
+
+def _run_on(sim: Simulator, exp: Experiment) -> Result:
+    metric = exp.resolved_metric()
+    if exp.workload.pattern == "allreduce":
+        if metric != "completion":
+            raise ValueError("allreduce only supports the completion metric")
+        return _run_allreduce(sim, exp)
+
+    traffic = _to_traffic(exp)
+    if metric == "throughput":
+        r = sim.run_throughput(traffic, warm=exp.warm, measure=exp.measure,
+                               seed=exp.seed)
+        return Result(experiment=exp, metric=metric,
+                      throughput=float(r["throughput"]),
+                      avg_hops=float(r["avg_hops"]),
+                      ejected=int(r["ejected"]))
+    if metric == "latency":
+        r = sim.run_latency(traffic, warm=exp.warm, measure=exp.measure,
+                            seed=exp.seed)
+        # zero ejections in the window -> NaN percentiles; map to None so
+        # the Result stays strict-JSON and round-trips losslessly
+        def _p(v):
+            return None if isinstance(v, float) and np.isnan(v) else int(v)
+        lat = {"p50": _p(r["p0.5"]), "p99": _p(r["p0.99"]),
+               "p9999": _p(r["p0.9999"])}
+        return Result(experiment=exp, metric=metric, latency=lat)
+    if metric == "completion":
+        if exp.workload.pattern != "all2all":
+            raise ValueError(
+                f"completion metric needs a collective workload, got "
+                f"{exp.workload.pattern!r}")
+        expected = sim.S * exp.workload.rounds
+        r = sim.run_completion(traffic, expected=expected, chunk=exp.chunk,
+                               max_slots=exp.max_slots, seed=exp.seed)
+        return Result(experiment=exp, metric=metric, slots=int(r["slots"]),
+                      completed=bool(r["completed"]))
+    raise ValueError(f"unknown metric {metric!r}")

@@ -1,0 +1,257 @@
+"""Frozen, hashable, JSON-serializable experiment specs.
+
+The declarative layer of the repo: an :class:`Experiment` composes
+
+* :class:`NetworkSpec`  — *what fabric* (topology family + params),
+* :class:`RouteSpec`    — *how packets move* (policy + switch resources),
+* :class:`WorkloadSpec` — *what traffic* (pattern / collective + intensity),
+
+plus the measurement protocol (warm-up, measurement window, completion
+bounds).  Every spec is a frozen dataclass that round-trips losslessly
+through ``to_dict()``/``from_dict()`` and ``to_json()``/``from_json()``,
+and is hashable — :func:`repro.api.sweep` keys compiled simulators on
+``(network, route)`` so grid points sharing a fabric reuse the jit cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping, Optional, Tuple
+
+__all__ = [
+    "NetworkSpec",
+    "RouteSpec",
+    "WorkloadSpec",
+    "Experiment",
+    "BERNOULLI_PATTERNS",
+    "COLLECTIVE_PATTERNS",
+]
+
+# patterns drawn fresh each slot (open-loop Bernoulli injection)
+BERNOULLI_PATTERNS = ("uniform", "rep", "rsp", "bu", "mice_elephant")
+# finite programs measured to completion
+COLLECTIVE_PATTERNS = ("all2all", "allreduce")
+
+
+def _freeze_value(key: str, v):
+    """Recursively convert lists to tuples and reject non-JSON leaves."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze_value(key, x) for x in v)
+    if not isinstance(v, (int, float, str, bool, type(None))):
+        raise TypeError(f"NetworkSpec param {key!r} must be a JSON scalar "
+                        f"or list thereof, got {type(v).__name__}")
+    return v
+
+
+def _freeze_params(params) -> Tuple[Tuple[str, Any], ...]:
+    """Normalize a params mapping to a sorted tuple of pairs (hashable)."""
+    if isinstance(params, Mapping):
+        items = params.items()
+    else:  # already a sequence of pairs (e.g. from an earlier freeze)
+        items = [(k, v) for k, v in params]
+    return tuple((str(k), _freeze_value(str(k), v)) for k, v in sorted(items))
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """A topology family name plus builder kwargs.
+
+    ``family`` is resolved through :mod:`repro.api.registry`
+    (``mrls | fat_tree | oft | dragonfly | dragonfly_plus | rfc`` out of the
+    box).  ``params`` are the builder's keyword arguments, stored as a
+    sorted tuple of pairs so the spec is hashable and order-insensitive.
+    """
+
+    family: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", _freeze_params(self.params))
+
+    def param_dict(self) -> dict:
+        return {k: v for k, v in self.params}
+
+    def to_dict(self) -> dict:
+        return {"family": self.family, "params": self.param_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "NetworkSpec":
+        return cls(family=d["family"], params=d.get("params", {}))
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteSpec:
+    """Routing policy plus the switch resources it runs on.
+
+    Mirrors :class:`repro.simulator.engine.SimConfig` minus the sim-RNG
+    seed (which belongs to the :class:`Experiment`).
+    """
+
+    policy: str = "polarized"
+    vcs: int = 4
+    max_hops: int = 8
+    deroute_penalty: float = 8.0
+    queue_depth: int = 8
+    out_queue: int = 4
+    speedup: int = 2
+    endpoint_queue: int = 4
+    pool: Optional[int] = None
+    hist_bins: int = 4096
+
+    def to_sim_config(self, seed: int = 0):
+        from ..simulator.engine import SimConfig
+
+        return SimConfig(
+            policy=self.policy, vcs=self.vcs, queue_depth=self.queue_depth,
+            out_queue=self.out_queue, speedup=self.speedup,
+            endpoint_queue=self.endpoint_queue, max_hops=self.max_hops,
+            deroute_penalty=self.deroute_penalty, pool=self.pool,
+            hist_bins=self.hist_bins, seed=seed,
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "RouteSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Traffic program.
+
+    ``pattern`` is one of the Bernoulli families
+    (``uniform | rep | rsp | bu | mice_elephant``, driven by ``load``) or a
+    collective (``all2all`` with ``rounds``; ``allreduce`` = Rabenseifner
+    over ``ranks`` ranks of ``vec_packets`` packets — first-class here,
+    subsuming the old hand-patched ``Traffic("phase")`` idiom).
+    """
+
+    pattern: str = "uniform"
+    load: float = 1.0
+    rounds: int = 0              # all2all
+    ranks: int = 0               # allreduce; 0 -> largest power of two <= S
+    vec_packets: int = 16        # allreduce vector size (packets)
+    elephant_frac: float = 0.1   # mice_elephant
+    elephant_size: int = 16
+
+    def __post_init__(self):
+        known = BERNOULLI_PATTERNS + COLLECTIVE_PATTERNS
+        if self.pattern not in known:
+            raise ValueError(
+                f"unknown pattern {self.pattern!r}; expected one of {known} "
+                "(the raw simulator 'phase' pattern is reached via "
+                "pattern='allreduce')")
+        if self.pattern == "all2all" and self.rounds <= 0:
+            raise ValueError("all2all needs rounds > 0 (0 rounds would "
+                             "report instant completion of an empty program)")
+        if self.pattern == "allreduce" and self.ranks:
+            if self.ranks < 2 or self.ranks & (self.ranks - 1):
+                raise ValueError(
+                    f"allreduce ranks must be a power of two >= 2 "
+                    f"(Rabenseifner's recursive halving), got {self.ranks}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "WorkloadSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """One runnable scenario: fabric x routing x workload + measurement.
+
+    ``metric`` is ``auto`` (Bernoulli patterns -> ``throughput``,
+    collectives -> ``completion``), ``throughput``, ``latency``, or
+    ``completion``.  ``seed`` drives both the traffic permutations and the
+    simulator PRNG stream — sweeping it on a shared simulator does not
+    recompile.
+    """
+
+    network: NetworkSpec
+    route: RouteSpec = RouteSpec()
+    workload: WorkloadSpec = WorkloadSpec()
+    name: str = ""
+    metric: str = "auto"
+    seed: int = 0
+    warm: int = 200
+    measure: int = 400
+    chunk: int = 16
+    max_slots: int = 60_000
+
+    def __post_init__(self):
+        if self.metric not in ("auto", "throughput", "latency", "completion"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+
+    # ------------------------------------------------------------------ #
+    def resolved_metric(self) -> str:
+        if self.metric != "auto":
+            return self.metric
+        if self.workload.pattern in COLLECTIVE_PATTERNS:
+            return "completion"
+        return "throughput"
+
+    def label(self) -> str:
+        return self.name or (f"{self.network.family}"
+                             f".{self.route.policy}.{self.workload.pattern}")
+
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {
+            "network": self.network.to_dict(),
+            "route": self.route.to_dict(),
+            "workload": self.workload.to_dict(),
+            "name": self.name,
+            "metric": self.metric,
+            "seed": self.seed,
+            "warm": self.warm,
+            "measure": self.measure,
+            "chunk": self.chunk,
+            "max_slots": self.max_slots,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Experiment":
+        d = dict(d)
+        return cls(
+            network=NetworkSpec.from_dict(d.pop("network")),
+            route=RouteSpec.from_dict(d.pop("route", {})),
+            workload=WorkloadSpec.from_dict(d.pop("workload", {})),
+            **d,
+        )
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Experiment":
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------------ #
+    def override(self, path: str, value) -> "Experiment":
+        """Return a copy with the dotted ``path`` replaced by ``value``.
+
+        Paths address the spec tree: ``seed``, ``workload.load``,
+        ``route.policy``, ``network.params.u``, ...  This is the primitive
+        :func:`repro.api.sweep` expands axes with.
+        """
+        head, _, rest = path.partition(".")
+        if not rest:
+            return dataclasses.replace(self, **{head: value})
+        sub = getattr(self, head)
+        if head == "network":
+            field, _, leaf = rest.partition(".")
+            if field == "params":
+                params = sub.param_dict()
+                params[leaf] = value
+                new = dataclasses.replace(sub, params=params)
+            else:
+                new = dataclasses.replace(sub, **{rest: value})
+        elif head in ("route", "workload"):
+            new = dataclasses.replace(sub, **{rest: value})
+        else:
+            raise KeyError(f"cannot override {path!r}")
+        return dataclasses.replace(self, **{head: new})

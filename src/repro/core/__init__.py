@@ -17,4 +17,16 @@ from .collectives import (
     all2all_lower_bound_slots, allreduce_lower_bound_slots,
 )
 
+# Canonical topology-family table: the string names the declarative layer
+# (``repro.api``) resolves NetworkSpec.family against.  Kept here, next to
+# the builders, so adding a topology automatically reaches every driver.
+TOPOLOGY_BUILDERS = {
+    "mrls": mrls,
+    "fat_tree": fat_tree,
+    "oft": oft,
+    "dragonfly": dragonfly,
+    "dragonfly_plus": dragonfly_plus,
+    "rfc": rfc,
+}
+
 __all__ = [k for k in dir() if not k.startswith("_")]

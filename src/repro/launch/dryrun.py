@@ -106,7 +106,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_stats.cost_analysis_dict(compiled)
     stats = hlo_stats.analyze(compiled.as_text(),
                               FUSED_SCOPES if fused else ())
 

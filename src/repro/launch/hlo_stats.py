@@ -32,6 +32,15 @@ DTYPE_BYTES = {
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    jax returns a one-element list of dicts, newer a dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
@@ -182,9 +191,15 @@ def _symbol_types(comp: list[Instruction], params: dict[str, str]) -> dict:
     return table
 
 
+def _operand_name(operand: str) -> str:
+    """Operand token -> symbol name.  Handles both HLO text styles:
+    bare ``%name`` and typed ``f32[128,256]{1,0} %name`` (older jax)."""
+    parts = operand.strip().split()
+    return parts[-1].lstrip("%") if parts else ""
+
+
 def _operand_bytes(operand: str, table: dict) -> int:
-    operand = operand.strip().lstrip("%")
-    t = table.get(operand)
+    t = table.get(_operand_name(operand))
     if t is None:
         return 0
     return parse_shape(t)[0]
@@ -243,7 +258,7 @@ def _instr_bytes(ins, table, comps) -> float:
         dus_write = 0.0
         for i in called:
             if i.op == "dynamic-update-slice" and len(i.operands) > 1:
-                upd = i.operands[1].strip().lstrip("%")
+                upd = _operand_name(i.operands[1])
                 dus_write += 2.0 * parse_shape(inner_table.get(upd, ""))[0]
         has_slice = ds_read > 0 or dus_write > 0
         if has_slice:
@@ -276,7 +291,7 @@ def analyze(txt: str, fused_scopes: tuple = ()) -> dict:
         n_out = 1
         for d in rshape:
             n_out *= d
-        lhs_t = table.get(ins.operands[0].strip().lstrip("%"), "")
+        lhs_t = table.get(_operand_name(ins.operands[0]), "")
         _, lshape = parse_shape(lhs_t)
         m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
         k = 1
@@ -341,7 +356,7 @@ def analyze(txt: str, fused_scopes: tuple = ()) -> dict:
                     b = parse_shape(ins.result_type)[0]
                     for o in ins.operands:
                         ob = _operand_bytes(o, table)
-                        prod = producers.get(o.strip().lstrip("%"))
+                        prod = producers.get(_operand_name(o))
                         if prod is not None and "convert" in prod.name:
                             src_b = sum(_operand_bytes(po, table)
                                         for po in prod.operands)
@@ -361,7 +376,7 @@ def analyze(txt: str, fused_scopes: tuple = ()) -> dict:
                 b = 0.0
                 for o in ins.operands:
                     ob = _operand_bytes(o, table)
-                    t = table.get(o.strip().lstrip("%"), "")
+                    t = table.get(_operand_name(o), "")
                     if t.startswith("f32") and ob > (1 << 20):
                         ob //= 2
                     b += ob

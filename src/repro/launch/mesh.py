@@ -12,15 +12,22 @@ never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from .._jax_compat import AxisType  # also polyfills jax.set_mesh/shard_map
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_test_mesh(shape=(1, 1, 1), axes=("pod", "data", "model")):
     """Tiny mesh for CPU smoke tests (1 device)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))

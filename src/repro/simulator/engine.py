@@ -99,6 +99,39 @@ class Simulator:
         assert (tables.dist_leaf >= 0).all(), "disconnected topology"
         self.dist = jnp.asarray(tables.dist_leaf, jnp.int32)     # [N1,N]
         self.leaf_ids = jnp.asarray(topo.leaf_ids, jnp.int32)    # [N1]
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+    # lifetime: compiled step functions are jit-cached with ``self`` as a
+    # static argument, so long-lived suites (~25 instances) accumulate
+    # executables until the host OOMs.  ``close()`` makes the teardown that
+    # callers used to do by hand (``del sim; jax.clear_caches()``) explicit
+    # and idempotent; the context-manager form scopes it.
+    # ------------------------------------------------------------------ #
+    def close(self, clear: bool = True) -> None:
+        """Mark the simulator dead and (by default) clear jax's jit caches.
+
+        jax has no per-instance executable eviction, so ``clear=True`` is a
+        process-global ``jax.clear_caches()`` — other live simulators will
+        recompile on next use.  Batch teardowns (``SimulatorCache.close``)
+        pass ``clear=False`` per instance and clear once at the end.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        if clear:
+            jax.clear_caches()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __enter__(self) -> "Simulator":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------------ #
     def init_state(self, traffic: Traffic, seed_arrays: dict) -> dict:
@@ -443,6 +476,8 @@ class Simulator:
     # high-level drivers
     # ------------------------------------------------------------------ #
     def make_state(self, traffic: Traffic, seed: int = 0) -> dict:
+        if self._closed:
+            raise RuntimeError("Simulator is closed")
         rng = np.random.default_rng(seed)
         seed_arrays = {}
         if traffic.pattern == "rep":
@@ -451,7 +486,10 @@ class Simulator:
             seed_arrays["sigma"] = rng.permutation(self.n1).astype(np.int32)
         if traffic.pattern == "phase":
             seed_arrays["partner"] = np.zeros(self.S, np.int32)  # set by caller
-        return self.init_state(traffic, seed_arrays)
+        st = self.init_state(traffic, seed_arrays)
+        if seed:  # thread the run seed into the sim PRNG (seed=0: legacy key)
+            st["key"] = jax.random.PRNGKey(self.cfg.seed + (seed << 16))
+        return st
 
     def run_throughput(self, traffic: Traffic, warm: int = 200,
                        measure: int = 400, seed: int = 0) -> dict:

@@ -1,0 +1,85 @@
+"""Fallback shim for ``hypothesis`` when the real package is unavailable.
+
+The container that runs tier-1 has no ``hypothesis`` wheel and installing one
+is off-limits, so :func:`install` registers a minimal, deterministic stand-in
+covering exactly the API surface the test-suite uses: ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``st.integers`` / ``st.sampled_from`` / ``st.booleans`` / ``st.floats``
+strategies.  Each property runs ``max_examples`` times on a fixed-seed RNG —
+a property *sampler*, not a shrinking fuzzer, but it executes the same
+assertions over the same domains.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def _integers(min_value=0, max_value=1 << 30):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def _given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` in ``sys.modules`` (idempotent)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.sampled_from = _sampled_from
+    st.booleans = _booleans
+    st.floats = _floats
+    mod.strategies = st
+    mod.given = _given
+    mod.settings = _settings
+    mod.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

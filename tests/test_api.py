@@ -1,0 +1,251 @@
+"""repro.api: registry coverage, spec serialization, run()/sweep() parity."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Experiment, NetworkSpec, Result, RouteSpec, SimulatorCache, WorkloadSpec,
+    build_network, expand_axes, open_simulator, register_topology, run,
+    sweep, topology_families,
+)
+from repro.core import build_tables, mrls
+from repro.simulator.engine import SimConfig, Simulator, Traffic
+
+TINY = NetworkSpec("mrls", {"n_leaves": 14, "u": 3, "d": 3, "seed": 0})
+ROUTE = RouteSpec(policy="polarized", max_hops=10, pool=4096)
+
+# one buildable spec per registered family (tiny instances)
+FAMILY_SPECS = {
+    "mrls": TINY,
+    "fat_tree": NetworkSpec("fat_tree", {"radix": 4, "h": 1}),
+    "oft": NetworkSpec("oft", {"q": 2}),
+    "dragonfly": NetworkSpec("dragonfly", {"a": 2, "p": 1, "h": 1}),
+    "dragonfly_plus": NetworkSpec("dragonfly_plus", {
+        "n_groups": 3, "leaves_per_group": 2, "spines_per_group": 2,
+        "p": 2, "global_per_spine": 1}),
+    "rfc": NetworkSpec("rfc", {"n_leaves": 6, "u": 4, "d": 2, "seed": 0}),
+}
+
+
+# ---------------------------------------------------------------------- #
+# registry
+# ---------------------------------------------------------------------- #
+def test_registry_lists_all_six_families():
+    assert set(FAMILY_SPECS) <= set(topology_families())
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_SPECS))
+def test_registry_builds_every_family(family):
+    topo = build_network(FAMILY_SPECS[family])
+    topo.validate()
+    assert topo.n_endpoints > 0
+
+
+def test_registry_unknown_family():
+    with pytest.raises(KeyError, match="unknown topology family"):
+        build_network(NetworkSpec("torus", {}))
+
+
+def test_register_topology_roundtrip():
+    register_topology("tiny_mrls_alias", mrls, overwrite=True)
+    topo = build_network(NetworkSpec("tiny_mrls_alias",
+                                     {"n_leaves": 14, "u": 3, "d": 3}))
+    assert topo.n_leaves == 14
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("mrls", mrls)
+
+
+# ---------------------------------------------------------------------- #
+# spec serialization
+# ---------------------------------------------------------------------- #
+def test_experiment_json_roundtrip_lossless():
+    exp = Experiment(
+        network=TINY, route=ROUTE,
+        workload=WorkloadSpec("mice_elephant", load=0.4, elephant_frac=0.2),
+        name="rt", metric="latency", seed=3, warm=10, measure=20,
+        chunk=8, max_slots=123,
+    )
+    again = Experiment.from_json(exp.to_json())
+    assert again == exp
+    assert hash(again) == hash(exp)
+    # dict form is plain-JSON (no tuples) and stable under a second trip
+    d = json.loads(exp.to_json())
+    assert d["network"]["params"] == {"n_leaves": 14, "u": 3, "d": 3,
+                                      "seed": 0}
+    assert Experiment.from_dict(d) == exp
+
+
+def test_network_spec_param_order_insensitive():
+    a = NetworkSpec("mrls", {"u": 3, "n_leaves": 14, "d": 3})
+    b = NetworkSpec("mrls", {"d": 3, "u": 3, "n_leaves": 14})
+    assert a == b and hash(a) == hash(b)
+
+
+def test_workload_rejects_unknown_pattern():
+    with pytest.raises(ValueError, match="unknown pattern"):
+        WorkloadSpec("phase")
+
+
+def test_workload_all2all_requires_rounds():
+    with pytest.raises(ValueError, match="rounds > 0"):
+        WorkloadSpec("all2all")
+
+
+def test_workload_allreduce_requires_pow2_ranks():
+    with pytest.raises(ValueError, match="power of two"):
+        WorkloadSpec("allreduce", ranks=12)
+    assert WorkloadSpec("allreduce", ranks=16).ranks == 16
+
+
+def test_network_spec_rejects_nested_non_scalars():
+    with pytest.raises(TypeError, match="JSON scalar"):
+        NetworkSpec("mrls", {"m": [[1, 2], {"a": 1}]})
+    nested = NetworkSpec("mrls", {"m": [1, 2]})
+    hash(nested)                              # lists frozen recursively
+
+
+def test_experiment_override_paths():
+    exp = Experiment(network=TINY)
+    assert exp.override("seed", 7).seed == 7
+    assert exp.override("workload.load", 0.3).workload.load == 0.3
+    assert exp.override("route.policy", "ksp").route.policy == "ksp"
+    assert exp.override("network.params.u", 6).network.param_dict()["u"] == 6
+
+
+# ---------------------------------------------------------------------- #
+# run() parity with the hand-wired Simulator path
+# ---------------------------------------------------------------------- #
+def test_run_matches_handwired_simulator():
+    exp = Experiment(network=TINY, route=ROUTE,
+                     workload=WorkloadSpec("uniform", load=0.5),
+                     warm=60, measure=100)
+    res = run(exp)
+
+    sim = Simulator(build_tables(mrls(14, u=3, d=3, seed=0)),
+                    SimConfig(policy="polarized", max_hops=10, pool=4096))
+    with sim:
+        ref = sim.run_throughput(Traffic("uniform", load=0.5),
+                                 warm=60, measure=100)
+    assert res.throughput == pytest.approx(ref["throughput"])
+    assert res.avg_hops == pytest.approx(ref["avg_hops"])
+    assert res.ejected == int(ref["ejected"])
+
+
+def test_run_allreduce_first_class():
+    exp = Experiment(network=TINY, route=ROUTE,
+                     workload=WorkloadSpec("allreduce", ranks=16,
+                                           vec_packets=8),
+                     max_slots=3000)
+    res = run(exp)
+    assert res.metric == "completion"
+    assert res.completed
+    assert res.slots == sum(res.phase_slots)
+    assert len(res.phase_slots) == 2 * 4          # log2(16) each direction
+    # result record JSON round-trips
+    again = Result.from_json(res.to_json())
+    assert again == res
+
+
+def test_run_result_metric_auto():
+    a2a = Experiment(network=TINY, route=ROUTE,
+                     workload=WorkloadSpec("all2all", rounds=2),
+                     max_slots=2000)
+    assert a2a.resolved_metric() == "completion"
+    res = run(a2a)
+    assert res.completed and res.slots >= 2
+
+
+# ---------------------------------------------------------------------- #
+# sweep
+# ---------------------------------------------------------------------- #
+def test_sweep_one_result_per_grid_point():
+    base = Experiment(network=TINY, route=ROUTE,
+                      workload=WorkloadSpec("uniform", load=0.5),
+                      warm=20, measure=40)
+    axes = {"workload.load": [0.2, 0.4], "seed": [0, 1, 2]}
+    results = sweep(base, axes)
+    assert len(results) == 6
+    got = {(r.experiment.workload.load, r.experiment.seed) for r in results}
+    assert got == {(l, s) for l in (0.2, 0.4) for s in (0, 1, 2)}
+    assert all(r.throughput is not None for r in results)
+
+
+def test_sweep_reuses_simulators_per_fabric():
+    base = Experiment(network=TINY, route=ROUTE,
+                      workload=WorkloadSpec("uniform", load=0.5),
+                      warm=10, measure=20)
+    cache = SimulatorCache()
+    sweep(base, {"workload.load": [0.2, 0.4], "seed": [0, 1]}, cache=cache)
+    assert len(cache) == 1                 # one fabric -> one simulator
+    sweep(base, {"route.policy": ["polarized", "ksp"]}, cache=cache)
+    assert len(cache) == 2                 # new policy -> one more
+    cache.close()
+    assert len(cache) == 0
+
+
+def test_expand_axes_fabric_outermost():
+    base = Experiment(network=TINY, route=ROUTE)
+    grid = expand_axes(base, {"seed": [0, 1],
+                              "route.policy": ["polarized", "ksp"]})
+    # fabric axis must vary slowest so consecutive points share simulators
+    policies = [e.route.policy for e in grid]
+    assert policies == ["polarized", "polarized", "ksp", "ksp"]
+
+
+def test_expand_axes_relabels_named_base():
+    base = Experiment(network=TINY, route=ROUTE, name="fig.base")
+    grid = expand_axes(base, {"route.policy": ["polarized", "ksp"]})
+    names = [e.label() for e in grid]
+    assert names == ["fig.base[route.policy=polarized]",
+                     "fig.base[route.policy=ksp]"]
+
+
+# ---------------------------------------------------------------------- #
+# lifetime
+# ---------------------------------------------------------------------- #
+def test_simulator_context_manager_closes():
+    with open_simulator(TINY, ROUTE) as sim:
+        r = sim.run_throughput(Traffic("uniform", load=0.3),
+                               warm=10, measure=20)
+        assert 0 <= r["throughput"] <= 1.5
+    assert sim.closed
+    with pytest.raises(RuntimeError, match="closed"):
+        sim.make_state(Traffic("uniform", load=0.3))
+
+
+# ---------------------------------------------------------------------- #
+# CLI
+# ---------------------------------------------------------------------- #
+def test_cli_run_spec_json(tmp_path, capsys):
+    from repro.api.cli import main
+
+    exp = Experiment(network=TINY, route=ROUTE,
+                     workload=WorkloadSpec("uniform", load=0.5),
+                     name="cli.tiny", warm=20, measure=40)
+    spec = tmp_path / "spec.json"
+    spec.write_text(exp.to_json())
+    out = tmp_path / "results.json"
+    assert main(["run", str(spec), "--out", str(out)]) == 0
+    assert "cli.tiny" in capsys.readouterr().out
+    records = json.loads(out.read_text())
+    assert len(records) == 1
+    res = Result.from_dict(records[0])
+    assert res.experiment == exp and res.throughput is not None
+
+
+def test_cli_sweep_spec_json(tmp_path):
+    from repro.api.cli import main
+
+    base = Experiment(network=TINY, route=ROUTE,
+                      workload=WorkloadSpec("uniform", load=0.5),
+                      warm=10, measure=20)
+    doc = {"base": json.loads(base.to_json()),
+           "axes": {"workload.load": [0.2, 0.5]}}
+    spec = tmp_path / "sweep.json"
+    spec.write_text(json.dumps(doc))
+    out = tmp_path / "results.json"
+    assert main(["sweep", str(spec), "--out", str(out)]) == 0
+    loads = [r["experiment"]["workload"]["load"]
+             for r in json.loads(out.read_text())]
+    assert loads == [0.2, 0.5]
