@@ -1,0 +1,135 @@
+"""Batched-replica speedup demo (ISSUE 2 acceptance criterion).
+
+Before/after timing on a 1008-endpoint MRLS all2all completion experiment.
+Each variant runs in its own subprocess so every timing is a clean
+cold-start wall clock (same-process ordering leaks allocator and cache
+state between variants):
+
+* ``before`` — the pre-batching path, emulated faithfully: one scalar
+  ``run()`` per seed, each building a private simulator, driving a *python*
+  chunk loop that syncs ``ejected`` to the host every chunk, and clearing
+  the jit caches on close (the old ``run()`` teardown) — so every seed pays
+  tables + trace + XLA compile again.
+* ``after.batched`` — ``run(Experiment(replicas=R))``: all R seeds in one
+  ``jax.vmap``-batched executable, one compile, completion detected on
+  device by a ``lax.while_loop`` (zero per-chunk host syncs).
+* ``after.sequential`` — R scalar runs through the new device-side loop
+  sharing one :class:`SimulatorCache`, for reference.
+
+Rows: ``name,us_total,derived``.  Acceptance: batched >= 3x before.
+``--replicas N`` / ``--rounds N`` override the defaults.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+NET_PARAMS = {"n_leaves": 168, "u": 6, "d": 6, "seed": 1}   # S = 1008
+CHUNK, MAX_SLOTS = 8, 20_000
+
+
+def _specs():
+    from repro.api import NetworkSpec, RouteSpec
+    return (NetworkSpec("mrls", NET_PARAMS),
+            RouteSpec(policy="polarized", vcs=4, max_hops=8))
+
+
+def phase_before(replicas: int, rounds: int) -> list:
+    """Pre-PR scalar completion runs: private simulator per seed,
+    host-synced python chunk loop, chunk-granular completion slot,
+    cache-clearing teardown."""
+    from repro.api import open_simulator
+    from repro.simulator.engine import Traffic
+    net, route = _specs()
+    slots = []
+    for seed in range(1, replicas + 1):
+        with open_simulator(net, route) as sim:
+            tr = Traffic("all2all", rounds=rounds)
+            st = sim.make_state(tr, seed)
+            expected = sim.S * rounds
+            done_at = None
+            while int(st["slot"]) < MAX_SLOTS:
+                st = sim.run_chunk(st, tr, CHUNK)
+                if int(st["ejected"]) >= expected:
+                    done_at = int(st["slot"])
+                    break
+            slots.append(done_at or int(st["slot"]))
+    return slots
+
+
+def phase_batched(replicas: int, rounds: int) -> list:
+    from repro.api import Experiment, WorkloadSpec, run
+    net, route = _specs()
+    res = run(Experiment(network=net, route=route,
+                         workload=WorkloadSpec("all2all", rounds=rounds),
+                         chunk=CHUNK, max_slots=MAX_SLOTS,
+                         seed=1, replicas=replicas))
+    return list(res.per_replica["slots"])
+
+
+def phase_sequential(replicas: int, rounds: int) -> list:
+    from repro.api import Experiment, SimulatorCache, WorkloadSpec, run
+    net, route = _specs()
+    with SimulatorCache() as cache:
+        return [run(Experiment(network=net, route=route,
+                               workload=WorkloadSpec("all2all", rounds=rounds),
+                               chunk=CHUNK, max_slots=MAX_SLOTS, seed=s),
+                    cache=cache).slots
+                for s in range(1, replicas + 1)]
+
+
+PHASES = {"before": phase_before, "batched": phase_batched,
+          "sequential": phase_sequential}
+
+
+def _child(phase: str, replicas: int, rounds: int):
+    t0 = time.perf_counter()
+    slots = PHASES[phase](replicas, rounds)
+    print(json.dumps({"t": time.perf_counter() - t0, "slots": slots}))
+
+
+def _spawn(phase: str, replicas: int, rounds: int) -> dict:
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()),
+         "--phase", phase, "--replicas", str(replicas),
+         "--rounds", str(rounds)],
+        check=True, capture_output=True, text=True, cwd=str(_ROOT))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(replicas: int = 8, rounds: int = 6):
+    from benchmarks.common import emit
+    before = _spawn("before", replicas, rounds)
+    batched = _spawn("batched", replicas, rounds)
+    seq = _spawn("sequential", replicas, rounds)
+
+    assert batched["slots"] == seq["slots"]          # batched == scalar, bitwise
+    assert all(n <= o for n, o in zip(batched["slots"], before["slots"]))
+
+    emit("bench_replicas.before_8x_scalar", before["t"] * 1e6,
+         f"slots={before['slots']}")
+    emit("bench_replicas.after_batched", batched["t"] * 1e6,
+         f"slots={batched['slots']}")
+    emit("bench_replicas.after_sequential_shared_cache", seq["t"] * 1e6,
+         f"slots={seq['slots']}")
+    emit("bench_replicas.speedup_batched_vs_before", 0.0,
+         f"{before['t'] / batched['t']:.2f}x")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+
+    def _opt(flag, default, cast=int):
+        return cast(argv[argv.index(flag) + 1]) if flag in argv else default
+    _replicas = _opt("--replicas", 8)
+    _rounds = _opt("--rounds", 6)
+    _phase = _opt("--phase", None, str)
+    if _phase:
+        _child(_phase, _replicas, _rounds)
+    else:
+        main(_replicas, _rounds)

@@ -27,12 +27,18 @@ PATTERNS = ("uniform", "rep", "rsp", "bu")
 def run_scenario(name: str, net: NetworkSpec, policy: str, max_hops: int,
                  warm: int, measure: int, a2a_rounds: int,
                  allreduce_ranks: int, vec_packets: int = 16,
-                 patterns=PATTERNS, pool=None):
+                 patterns=PATTERNS, pool=None, replicas: int = 1):
+    """``replicas > 1`` runs every experiment as one vmapped batch over
+    that many seeds (the paper's figures average random MRLS arbitration
+    seeds); reported values are across-replica means."""
     route = RouteSpec(policy=policy, vcs=4, max_hops=max_hops, pool=pool)
 
     def exp(workload, **kw):
         return Experiment(network=net, route=route, workload=workload,
-                          warm=warm, measure=measure, **kw)
+                          warm=warm, measure=measure, replicas=replicas, **kw)
+
+    def slots_str(r):
+        return f"{r.slots:.1f}" if isinstance(r.slots, float) else f"{r.slots}"
 
     with SimulatorCache() as cache:
         # throughput at max injection
@@ -48,14 +54,27 @@ def run_scenario(name: str, net: NetworkSpec, policy: str, max_hops: int,
         emit(f"{name}.lat.mice_elephant", us,
              f"p50={r.latency['p50']}|p99={r.latency['p99']}"
              f"|p9999={r.latency['p9999']}")
-        # All2All completion (chunk=16 -> 16-slot completion resolution)
+        # All2All completion (device-side loop, exact completion slot)
         r, us = timed(lambda: run(
             exp(WorkloadSpec("all2all", rounds=a2a_rounds), max_slots=60_000),
             cache=cache))
-        emit(f"{name}.all2all", us, f"slots={r.slots}|completed={r.completed}")
+        emit(f"{name}.all2all", us,
+             f"slots={slots_str(r)}|completed={r.completed}")
         # Rabenseifner Allreduce (power-of-two ranks mapped onto endpoints)
         r = run(exp(WorkloadSpec("allreduce", ranks=allreduce_ranks,
                                  vec_packets=vec_packets),
                     max_slots=30_000), cache=cache)
         emit(f"{name}.allreduce", 0.0,
-             f"slots={r.slots}|completed={r.completed}")
+             f"slots={slots_str(r)}|completed={r.completed}")
+
+
+def cli_replicas(argv, default: int = 4) -> int:
+    """Shared ``--replicas N`` / ``--replicas=N`` parsing for fig drivers."""
+    for i, arg in enumerate(argv):
+        if arg == "--replicas":
+            if i + 1 >= len(argv):
+                raise SystemExit("--replicas requires a value")
+            return int(argv[i + 1])
+        if arg.startswith("--replicas="):
+            return int(arg.split("=", 1)[1])
+    return default

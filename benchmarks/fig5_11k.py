@@ -10,7 +10,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.api import NetworkSpec
-from benchmarks.bench_sim import run_scenario
+from benchmarks.bench_sim import cli_replicas, run_scenario
 
 
 def _mrls(n_leaves, u, d):
@@ -18,9 +18,10 @@ def _mrls(n_leaves, u, d):
                                 "seed": 1})
 
 
-def main(full: bool = False):
+def main(full: bool = False, replicas: int = 4):
     print("# fig5: 11K-endpoint-scale indirect networks "
-          f"({'FULL paper size' if full else 'scaled radix-12 family'})")
+          f"({'FULL paper size' if full else 'scaled radix-12 family'}, "
+          f"replicas={replicas})")
     if full:
         scen = [
             ("fig5.oft_q17.pol", NetworkSpec("oft", {"q": 17}), "polarized", 6),
@@ -44,8 +45,9 @@ def main(full: bool = False):
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 256
     for name, net, policy, hops in scen:
-        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks,
+                     replicas=replicas)
 
 
 if __name__ == "__main__":
-    main("--full" in sys.argv)
+    main("--full" in sys.argv, replicas=cli_replicas(sys.argv))

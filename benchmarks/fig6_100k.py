@@ -8,7 +8,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.api import NetworkSpec
-from benchmarks.bench_sim import run_scenario
+from benchmarks.bench_sim import cli_replicas, run_scenario
 
 
 def _mrls(n_leaves, u, d):
@@ -16,9 +16,10 @@ def _mrls(n_leaves, u, d):
                                 "seed": 1})
 
 
-def main(full: bool = False):
+def main(full: bool = False, replicas: int = 4):
     print("# fig6: 100K-endpoint-scale "
-          f"({'FULL paper size' if full else 'scaled radix-12 family'})")
+          f"({'FULL paper size' if full else 'scaled radix-12 family'}, "
+          f"replicas={replicas})")
     if full:
         scen = [
             ("fig6.ft50.min",
@@ -40,8 +41,9 @@ def main(full: bool = False):
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 1024
     for name, net, policy, hops in scen:
-        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks,
+                     replicas=replicas)
 
 
 if __name__ == "__main__":
-    main("--full" in sys.argv)
+    main("--full" in sys.argv, replicas=cli_replicas(sys.argv))

@@ -7,7 +7,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.api import NetworkSpec
-from benchmarks.bench_sim import run_scenario
+from benchmarks.bench_sim import cli_replicas, run_scenario
 
 
 def _dfp(n_groups, lpg, spg, p, gps):
@@ -16,9 +16,10 @@ def _dfp(n_groups, lpg, spg, p, gps):
         "spines_per_group": spg, "p": p, "global_per_spine": gps})
 
 
-def main(full: bool = False):
+def main(full: bool = False, replicas: int = 4):
     print("# fig7: direct-network comparison "
-          f"({'FULL paper size' if full else 'scaled family'})")
+          f"({'FULL paper size' if full else 'scaled family'}, "
+          f"replicas={replicas})")
     if full:
         scen = [
             ("fig7.df.ugal",
@@ -40,8 +41,9 @@ def main(full: bool = False):
         ]
         warm, measure, rounds, ranks = 250, 250, 12, 256
     for name, net, policy, hops in scen:
-        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks)
+        run_scenario(name, net, policy, hops, warm, measure, rounds, ranks,
+                     replicas=replicas)
 
 
 if __name__ == "__main__":
-    main("--full" in sys.argv)
+    main("--full" in sys.argv, replicas=cli_replicas(sys.argv))

@@ -12,4 +12,9 @@ python -m pytest -x -q
 echo "== smoke: repro.api CLI on a tiny spec =="
 python -m repro.api run examples/specs/tiny_mrls.json
 
+echo "== smoke: batched (vmapped) replicas=2 completion run =="
+mkdir -p artifacts
+python -m repro.api run examples/specs/tiny_mrls_a2a.json \
+    --replicas 2 --out artifacts/batched_smoke_result.json
+
 echo "CI OK"

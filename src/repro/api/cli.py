@@ -2,11 +2,14 @@
 
 Commands:
 
-* ``run <spec.json> [--out results.json]`` — spec file holds one
-  experiment object or ``{"experiments": [...]}``; simulators are shared
-  across experiments on the same fabric.
-* ``sweep <spec.json> [--out results.json]`` — spec file holds
-  ``{"base": <experiment>, "axes": {"workload.load": [0.2, 0.5], ...}}``.
+* ``run <spec.json> [--replicas R] [--out results.json]`` — spec file
+  holds one experiment object or ``{"experiments": [...]}``; simulators
+  are shared across experiments on the same fabric.  ``--replicas R``
+  overrides every experiment's ``replicas`` (one vmapped batched run over
+  R seeds instead of R sequential runs).
+* ``sweep <spec.json> [--replicas R] [--out results.json]`` — spec file
+  holds ``{"base": <experiment>, "axes": {"workload.load": [...], ...}}``;
+  a seed-only axis is folded into one batched run per remaining grid point.
 * ``families`` — list registered topology families.
 
 Each result prints as a one-line human summary on stderr-free stdout plus,
@@ -29,14 +32,21 @@ __all__ = ["main"]
 
 def _summary(res: Result) -> str:
     bits = [f"{res.name}", f"metric={res.metric}"]
+    if res.replica_seeds is not None:
+        bits.append(f"replicas={len(res.replica_seeds)}")
     if res.throughput is not None:
         bits.append(f"throughput={res.throughput:.3f}")
         bits.append(f"avg_hops={res.avg_hops:.2f}")
     if res.latency is not None:
         bits.append("lat " + "/".join(f"{k}={v}" for k, v in res.latency.items()))
     if res.slots is not None:
-        bits.append(f"slots={res.slots}")
+        slots = (f"{res.slots:.1f}" if isinstance(res.slots, float)
+                 else f"{res.slots}")
+        bits.append(f"slots={slots}")
         bits.append(f"completed={res.completed}")
+        agg = res.aggregates or {}
+        if "slots" in agg:
+            bits.append(f"slots_std={agg['slots']['std']:.1f}")
     return "  ".join(bits)
 
 
@@ -57,7 +67,10 @@ def _emit(results: List[Result], out: Optional[str]) -> None:
 def _cmd_run(args) -> int:
     doc = _load(args.spec)
     specs = doc["experiments"] if "experiments" in doc else [doc]
-    results = run_all(Experiment.from_dict(d) for d in specs)
+    exps = [Experiment.from_dict(d) for d in specs]
+    if args.replicas is not None:
+        exps = [e.override("replicas", args.replicas) for e in exps]
+    results = run_all(exps)
     _emit(results, args.out)
     return 0
 
@@ -65,6 +78,8 @@ def _cmd_run(args) -> int:
 def _cmd_sweep(args) -> int:
     doc = _load(args.spec)
     base = Experiment.from_dict(doc["base"])
+    if args.replicas is not None:
+        base = base.override("replicas", args.replicas)
     results = sweep(base, doc.get("axes", {}))
     _emit(results, args.out)
     return 0
@@ -84,11 +99,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_run = sub.add_parser("run", help="run experiment spec(s) from JSON")
     p_run.add_argument("spec", help="path to the experiment JSON file")
     p_run.add_argument("--out", help="write full Result JSON records here")
+    p_run.add_argument("--replicas", type=int, default=None,
+                       help="override replicas (>= 1): one vmapped batched "
+                            "run over R seeds per experiment")
     p_run.set_defaults(fn=_cmd_run)
 
     p_sweep = sub.add_parser("sweep", help="run a {base, axes} sweep spec")
     p_sweep.add_argument("spec", help="path to the sweep JSON file")
     p_sweep.add_argument("--out", help="write full Result JSON records here")
+    p_sweep.add_argument("--replicas", type=int, default=None,
+                         help="override the base experiment's replicas (>= 1)")
     p_sweep.set_defaults(fn=_cmd_sweep)
 
     p_fam = sub.add_parser("families", help="list topology families")

@@ -15,6 +15,7 @@ import json
 from typing import Mapping, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import build_tables
@@ -35,6 +36,24 @@ def routing_tables(network: NetworkSpec, full: bool = False):
 # ---------------------------------------------------------------------- #
 # results
 # ---------------------------------------------------------------------- #
+def _retuple(v):
+    """JSON arrays -> tuples, recursively (inverse of JSON serialization)."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_retuple(x) for x in v)
+    return v
+
+
+def _aggregate(values) -> Optional[dict]:
+    """mean/std/min/max over per-replica values (``None`` entries dropped;
+    bools averaged as completion fractions)."""
+    vals = [float(v) for v in values if v is not None]
+    if not vals:
+        return None
+    arr = np.asarray(vals, np.float64)
+    return {"mean": float(arr.mean()), "std": float(arr.std()),
+            "min": float(arr.min()), "max": float(arr.max())}
+
+
 @dataclasses.dataclass(frozen=True)
 class Result:
     """Structured record of one experiment run.
@@ -43,17 +62,28 @@ class Result:
     ``None``.  ``latency`` maps percentile labels (``p50``/``p99``/
     ``p9999``) to slot counts; ``phase_slots`` holds per-phase completion
     slots for collectives with a phase schedule (allreduce).
+
+    For a batched run (``experiment.replicas > 1``) the scalar metric
+    fields hold the across-replica *mean* (``completed`` is the AND), and
+    three extra fields are populated: ``replica_seeds`` (the seeds, in
+    replica order), ``per_replica`` (field name -> tuple of exact
+    per-replica values), and ``aggregates`` (field name ->
+    ``{"mean","std","min","max"}``).
     """
 
     experiment: Experiment
     metric: str
     throughput: Optional[float] = None
     avg_hops: Optional[float] = None
-    ejected: Optional[int] = None
+    ejected: Optional[float] = None
+    pool_stall: Optional[float] = None
     latency: Optional[Mapping[str, int]] = None
-    slots: Optional[int] = None
+    slots: Optional[float] = None
     completed: Optional[bool] = None
-    phase_slots: Optional[Tuple[int, ...]] = None
+    phase_slots: Optional[Tuple[float, ...]] = None
+    replica_seeds: Optional[Tuple[int, ...]] = None
+    per_replica: Optional[Mapping[str, Tuple]] = None
+    aggregates: Optional[Mapping[str, Mapping[str, float]]] = None
 
     @property
     def name(self) -> str:
@@ -66,14 +96,24 @@ class Result:
             d["latency"] = dict(self.latency)
         if self.phase_slots is not None:
             d["phase_slots"] = list(self.phase_slots)
+        if self.replica_seeds is not None:
+            d["replica_seeds"] = list(self.replica_seeds)
+        if self.per_replica is not None:
+            d["per_replica"] = {k: list(v) for k, v in self.per_replica.items()}
+        if self.aggregates is not None:
+            d["aggregates"] = {k: dict(v) for k, v in self.aggregates.items()}
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Result":
         d = dict(d)
         d["experiment"] = Experiment.from_dict(d["experiment"])
-        if d.get("phase_slots") is not None:
-            d["phase_slots"] = tuple(d["phase_slots"])
+        for key in ("phase_slots", "replica_seeds"):
+            if d.get(key) is not None:
+                d[key] = _retuple(d[key])
+        if d.get("per_replica") is not None:
+            d["per_replica"] = {k: _retuple(v)
+                                for k, v in d["per_replica"].items()}
         return cls(**d)
 
     def to_json(self, **kw) -> str:
@@ -165,27 +205,199 @@ def _to_traffic(exp: Experiment) -> Traffic:
                    elephant_size=w.elephant_size)
 
 
-def _run_allreduce(sim: Simulator, exp: Experiment) -> Result:
+def _allreduce_ranks(sim: Simulator, exp: Experiment) -> int:
     n = exp.workload.ranks or 1 << (sim.S.bit_length() - 1)
     if n > sim.S:
         raise ValueError(f"allreduce ranks {n} > endpoints {sim.S}")
-    total, ok, per_phase = 0, True, []
+    return n
+
+
+def _run_allreduce(sim: Simulator, exp: Experiment) -> Result:
+    n = _allreduce_ranks(sim, exp)
+    total, ok, stall, per_phase = 0, True, 0, []
     for ph in rabenseifner_phases(n, exp.workload.vec_packets):
         tr = Traffic("phase", phase_packets=ph["packets"])
         st = sim.make_state(tr, seed=exp.seed)
         partner = np.arange(sim.S, dtype=np.int32)
         partner[:n] = ph["partner"]
         st["partner"] = np.asarray(partner)
-        expected = int((partner[:n] != np.arange(n)).sum()) * ph["packets"]
+        # every endpoint starts one ``packets``-size message (self-partnered
+        # ones deliver locally and still count in ``ejected``), so the
+        # completion target is all S*packets deliveries — counting only the
+        # inter-rank messages would let the local fast path cross the
+        # threshold while rank traffic is still in flight
+        expected = sim.S * ph["packets"]
         r = sim.run_completion(tr, expected=expected, chunk=exp.chunk,
                                max_slots=exp.max_slots, state=st)
         ok &= r["completed"]
         total += r["slots"]
+        stall += r["pool_stall"]
         per_phase.append(int(r["slots"]))
     return Result(experiment=exp, metric="completion", slots=total,
-                  completed=ok, phase_slots=tuple(per_phase))
+                  completed=ok, pool_stall=stall,
+                  phase_slots=tuple(per_phase))
 
 
+# ---------------------------------------------------------------------- #
+# batched (vmapped-replica) execution
+# ---------------------------------------------------------------------- #
+def _batched_metrics(sim: Simulator, exp: Experiment, seeds) -> Tuple[str, dict]:
+    """Run ``exp`` once per seed inside one vmapped executable.
+
+    Returns ``(metric, per)`` where ``per`` maps metric field names to
+    tuples of exact per-replica python scalars (``phase_slots``: tuple of
+    per-replica tuples).  Replica ``i`` is bitwise-identical to a scalar
+    run with ``seed=seeds[i]``.
+    """
+    metric = exp.resolved_metric()
+    w = exp.workload
+    seeds = [int(s) for s in seeds]
+
+    if w.pattern == "allreduce":
+        if metric != "completion":
+            raise ValueError("allreduce only supports the completion metric")
+        n = _allreduce_ranks(sim, exp)
+        R = len(seeds)
+        total = np.zeros(R, np.int64)
+        ok = np.ones(R, bool)
+        stall = np.zeros(R, np.int64)
+        phases = []
+        for ph in rabenseifner_phases(n, w.vec_packets):
+            tr = Traffic("phase", phase_packets=ph["packets"])
+            partner = np.arange(sim.S, dtype=np.int32)
+            partner[:n] = ph["partner"]
+            bst = sim.make_batch_state(tr, seeds)
+            bst["partner"] = jnp.broadcast_to(jnp.asarray(partner),
+                                              (len(seeds), sim.S))
+            # all S*packets deliveries, as in the scalar path above
+            expected = sim.S * ph["packets"]
+            r = sim.run_completion(tr, expected=expected, chunk=exp.chunk,
+                                   max_slots=exp.max_slots, state=bst)
+            ok &= np.asarray(r["completed"])
+            total += np.asarray(r["slots"])
+            stall += np.asarray(r["pool_stall"])
+            phases.append(np.asarray(r["slots"]))
+        per_phase = np.stack(phases, axis=1)                     # [R, phases]
+        return metric, {
+            "slots": tuple(int(x) for x in total),
+            "completed": tuple(bool(x) for x in ok),
+            "pool_stall": tuple(int(x) for x in stall),
+            "phase_slots": tuple(tuple(int(v) for v in row)
+                                 for row in per_phase),
+        }
+
+    traffic = _to_traffic(exp)
+    if metric == "throughput":
+        r = sim.run_throughput_batch(traffic, seeds, warm=exp.warm,
+                                     measure=exp.measure)
+        return metric, {
+            "throughput": tuple(float(x) for x in r["throughput"]),
+            "avg_hops": tuple(float(x) for x in r["avg_hops"]),
+            "ejected": tuple(int(x) for x in r["ejected"]),
+            "pool_stall": tuple(int(x) for x in r["pool_stall"]),
+        }
+    if metric == "latency":
+        r = sim.run_latency_batch(traffic, seeds, warm=exp.warm,
+                                  measure=exp.measure)
+
+        def _p(v):
+            return None if np.isnan(v) else int(v)
+        return metric, {
+            "p50": tuple(_p(v) for v in r["p0.5"]),
+            "p99": tuple(_p(v) for v in r["p0.99"]),
+            "p9999": tuple(_p(v) for v in r["p0.9999"]),
+        }
+    if metric == "completion":
+        if w.pattern != "all2all":
+            raise ValueError(
+                f"completion metric needs a collective workload, got "
+                f"{w.pattern!r}")
+        r = sim.run_completion_batch(traffic, expected=sim.S * w.rounds,
+                                     seeds=seeds, chunk=exp.chunk,
+                                     max_slots=exp.max_slots)
+        return metric, {
+            "slots": tuple(int(x) for x in r["slots"]),
+            "completed": tuple(bool(x) for x in r["completed"]),
+            "pool_stall": tuple(int(x) for x in r["pool_stall"]),
+        }
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def _batched_result(exp: Experiment, seeds, metric: str, per: dict) -> Result:
+    agg = {}
+    for k, vals in per.items():
+        if k == "phase_slots":
+            continue
+        a = _aggregate(vals)
+        if a is not None:
+            agg[k] = a
+
+    def mean(k):
+        return agg[k]["mean"] if k in agg else None
+
+    if metric == "throughput":
+        kw = dict(throughput=mean("throughput"), avg_hops=mean("avg_hops"),
+                  ejected=mean("ejected"), pool_stall=mean("pool_stall"))
+    elif metric == "latency":
+        kw = dict(latency={"p50": mean("p50"), "p99": mean("p99"),
+                           "p9999": mean("p9999")})
+    else:
+        kw = dict(slots=mean("slots"),
+                  completed=bool(all(per["completed"])),
+                  pool_stall=mean("pool_stall"))
+        if "phase_slots" in per:
+            rows = per["phase_slots"]
+            kw["phase_slots"] = tuple(
+                float(np.mean([row[i] for row in rows]))
+                for i in range(len(rows[0])))
+    return Result(experiment=exp, metric=metric,
+                  replica_seeds=tuple(int(s) for s in seeds),
+                  per_replica=per, aggregates=agg, **kw)
+
+
+def _unfold_batch(group, metric: str, per: dict) -> list:
+    """Split one batched run back into per-experiment scalar Results (used
+    when ``run_all`` folds a seed-only group — replica i is bitwise the
+    scalar run of ``group[i]``, so the Results are interchangeable)."""
+    out = []
+    for i, e in enumerate(group):
+        if metric == "throughput":
+            kw = dict(throughput=per["throughput"][i],
+                      avg_hops=per["avg_hops"][i],
+                      ejected=per["ejected"][i],
+                      pool_stall=per["pool_stall"][i])
+        elif metric == "latency":
+            kw = dict(latency={"p50": per["p50"][i], "p99": per["p99"][i],
+                               "p9999": per["p9999"][i]})
+        else:
+            kw = dict(slots=per["slots"][i], completed=per["completed"][i],
+                      pool_stall=per["pool_stall"][i])
+            if "phase_slots" in per:
+                kw["phase_slots"] = per["phase_slots"][i]
+        out.append(Result(experiment=e, metric=metric, **kw))
+    return out
+
+
+def _fold_key(e: Experiment) -> Experiment:
+    return dataclasses.replace(e, seed=0, name="")
+
+
+def _fold_groups(experiments) -> list:
+    """Group consecutive experiments that differ only in ``seed``/``name``
+    (unbatched ones) — each group becomes one vmapped run."""
+    groups = []
+    for e in experiments:
+        if (groups and e.replicas == 1 and groups[-1][0].replicas == 1
+                and _fold_key(groups[-1][0]) == _fold_key(e)):
+            groups[-1].append(e)
+        else:
+            groups.append([e])
+    return groups
+
+
+# ---------------------------------------------------------------------- #
+# entry points
+# ---------------------------------------------------------------------- #
 def run(experiment: Experiment, *,
         cache: Optional[SimulatorCache] = None) -> Result:
     """Execute ``experiment`` end to end and return a :class:`Result`.
@@ -204,23 +416,40 @@ def run(experiment: Experiment, *,
             sim.close()
 
 
-def run_all(experiments, *,
-            cache: Optional[SimulatorCache] = None) -> list:
+def run_all(experiments, *, cache: Optional[SimulatorCache] = None,
+            fold_seeds: bool = True) -> list:
     """Run a sequence of experiments, sharing simulators across same-fabric
     entries.  With a private cache (none passed in), each fabric's simulator
     is evicted right after its last use so multi-fabric suites don't
-    accumulate ~25 live instances (the documented host-OOM mode)."""
+    accumulate ~25 live instances (the documented host-OOM mode).
+
+    ``fold_seeds=True`` (default) folds consecutive experiments that differ
+    only in ``seed`` (e.g. a ``sweep`` seed axis) into one vmapped batched
+    run, then splits the Results back out — same Results, one compile and
+    no per-replica host loops.
+    """
     experiments = list(experiments)
     owns = cache is None
     if owns:
         cache = SimulatorCache()
+    groups = (_fold_groups(experiments) if fold_seeds
+              else [[e] for e in experiments])
     last_use = {(e.network, e.route): i for i, e in enumerate(experiments)}
     results = []
+    pos = 0
     try:
-        for i, exp in enumerate(experiments):
-            results.append(run(exp, cache=cache))
-            if owns and last_use[(exp.network, exp.route)] == i:
-                cache.release(exp.network, exp.route)
+        for group in groups:
+            if len(group) == 1:
+                results.append(run(group[0], cache=cache))
+            else:
+                sim = cache.get(group[0].network, group[0].route)
+                metric, per = _batched_metrics(
+                    sim, group[0], [e.seed for e in group])
+                results.extend(_unfold_batch(group, metric, per))
+            pos += len(group)
+            e = group[-1]
+            if owns and last_use[(e.network, e.route)] == pos - 1:
+                cache.release(e.network, e.route)
         return results
     finally:
         if owns:
@@ -229,6 +458,10 @@ def run_all(experiments, *,
 
 def _run_on(sim: Simulator, exp: Experiment) -> Result:
     metric = exp.resolved_metric()
+    if exp.replicas > 1:
+        seeds = exp.replica_seeds()
+        metric, per = _batched_metrics(sim, exp, seeds)
+        return _batched_result(exp, seeds, metric, per)
     if exp.workload.pattern == "allreduce":
         if metric != "completion":
             raise ValueError("allreduce only supports the completion metric")
@@ -241,7 +474,8 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
         return Result(experiment=exp, metric=metric,
                       throughput=float(r["throughput"]),
                       avg_hops=float(r["avg_hops"]),
-                      ejected=int(r["ejected"]))
+                      ejected=int(r["ejected"]),
+                      pool_stall=int(r["pool_stall"]))
     if metric == "latency":
         r = sim.run_latency(traffic, warm=exp.warm, measure=exp.measure,
                             seed=exp.seed)
@@ -261,5 +495,6 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
         r = sim.run_completion(traffic, expected=expected, chunk=exp.chunk,
                                max_slots=exp.max_slots, seed=exp.seed)
         return Result(experiment=exp, metric=metric, slots=int(r["slots"]),
-                      completed=bool(r["completed"]))
+                      completed=bool(r["completed"]),
+                      pool_stall=int(r["pool_stall"]))
     raise ValueError(f"unknown metric {metric!r}")

@@ -169,6 +169,11 @@ class Experiment:
     ``completion``.  ``seed`` drives both the traffic permutations and the
     simulator PRNG stream — sweeping it on a shared simulator does not
     recompile.
+
+    ``replicas`` makes replication a compiled axis: R > 1 runs seeds
+    ``seed .. seed+R-1`` through one ``jax.vmap``-batched executable (one
+    compile, no per-replica host round-trips) and the :class:`Result`
+    carries per-replica values plus mean/std/min/max aggregates.
     """
 
     network: NetworkSpec
@@ -177,6 +182,7 @@ class Experiment:
     name: str = ""
     metric: str = "auto"
     seed: int = 0
+    replicas: int = 1
     warm: int = 200
     measure: int = 400
     chunk: int = 16
@@ -185,6 +191,8 @@ class Experiment:
     def __post_init__(self):
         if self.metric not in ("auto", "throughput", "latency", "completion"):
             raise ValueError(f"unknown metric {self.metric!r}")
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
 
     # ------------------------------------------------------------------ #
     def resolved_metric(self) -> str:
@@ -198,6 +206,10 @@ class Experiment:
         return self.name or (f"{self.network.family}"
                              f".{self.route.policy}.{self.workload.pattern}")
 
+    def replica_seeds(self) -> Tuple[int, ...]:
+        """The per-replica seeds a batched run uses: ``seed .. seed+R-1``."""
+        return tuple(self.seed + i for i in range(self.replicas))
+
     # ------------------------------------------------------------------ #
     def to_dict(self) -> dict:
         return {
@@ -207,6 +219,7 @@ class Experiment:
             "name": self.name,
             "metric": self.metric,
             "seed": self.seed,
+            "replicas": self.replicas,
             "warm": self.warm,
             "measure": self.measure,
             "chunk": self.chunk,

@@ -7,7 +7,9 @@ to value lists — into the full grid, runs every point through
 row-major order (last axis fastest).  Grid points that share a
 ``(network, route)`` pair reuse the same compiled simulator via
 :class:`SimulatorCache`; axes are ordered so fabric-changing axes vary
-slowest, maximizing reuse runs between rebuilds.
+slowest (maximizing reuse runs between rebuilds) and a ``seed`` axis
+varies fastest (so :func:`repro.api.run_all` can fold each seed-only
+stretch into one vmapped batched run).
 """
 from __future__ import annotations
 
@@ -25,8 +27,13 @@ _FABRIC_PREFIXES = ("network.", "route.")
 
 def _axis_order(axes: Mapping[str, Sequence]) -> list:
     names = list(axes)
-    return (sorted([n for n in names if n.startswith(_FABRIC_PREFIXES)])
-            + [n for n in names if not n.startswith(_FABRIC_PREFIXES)])
+    fabric = sorted(n for n in names if n.startswith(_FABRIC_PREFIXES))
+    rest = [n for n in names
+            if not n.startswith(_FABRIC_PREFIXES) and n != "seed"]
+    # seed varies fastest so consecutive grid points differ only in seed and
+    # run_all can fold them into one vmapped batched run
+    tail = ["seed"] if "seed" in names else []
+    return fabric + rest + tail
 
 
 def expand_axes(base: Experiment, axes: Mapping[str, Sequence]) -> list:
@@ -49,11 +56,19 @@ def expand_axes(base: Experiment, axes: Mapping[str, Sequence]) -> list:
 
 
 def sweep(base: Experiment, axes: Mapping[str, Sequence], *,
-          cache: Optional[SimulatorCache] = None) -> list:
+          cache: Optional[SimulatorCache] = None,
+          fold_seeds: bool = True) -> list:
     """Run the cartesian grid; returns ``[Result]``, one per grid point.
 
     With a private cache (none passed in), each fabric's simulator is
     evicted right after its last grid point — fabric axes vary slowest, so
     at most one compiled simulator is live at a time.
+
+    A trailing seed-only stretch of the grid (e.g. a ``"seed"`` axis, which
+    always varies fastest) is folded into one ``jax.vmap``-batched run per
+    surrounding grid point (``fold_seeds=False`` restores one scalar run
+    per point); either way the returned Results are per-point and
+    bitwise-identical.
     """
-    return run_all(expand_axes(base, axes), cache=cache)
+    return run_all(expand_axes(base, axes), cache=cache,
+                   fold_seeds=fold_seeds)

@@ -22,8 +22,13 @@ tables:
 * ``ugal``             — UGAL-L with Valiant intermediate leaf (Dragonfly).
 * ``valiant``          — always-Valiant.
 
-Everything is fixed-shape; a run is a python loop over jitted
-``lax.scan`` chunks so completion can be detected early.
+Everything is fixed-shape; throughput/latency runs are jitted ``lax.scan``
+chunks, and completion runs are a single device-side ``lax.while_loop``
+over chunks (the ``ejected >= expected`` check never round-trips to the
+host, and the exact completion slot is recorded from the ejection-counter
+crossing).  Replication is a first-class compiled axis: ``make_batch_state``
+stacks R independently-seeded states along a leading replica dimension and
+``run_*_batch`` drive all replicas through one ``jax.vmap``-ed executable.
 """
 from __future__ import annotations
 
@@ -153,6 +158,7 @@ class Simulator:
             "msg_rem": Z(self.S), "msg_dst": Z(self.S), "prog": Z(self.S),
             # stats
             "ejected": Z(), "created": Z(), "hop_sum": Z(),
+            "pool_stall": Z(),
             "lat_hist": Z(self.cfg.hist_bins),
             "slot": Z(),
             "key": jax.random.PRNGKey(self.cfg.seed),
@@ -214,7 +220,12 @@ class Simulator:
         rank = jnp.cumsum(want_net.astype(jnp.int32)) - 1
         free_idx = jnp.nonzero(st["p_free"], size=min(S, self.pool),
                                fill_value=-1)[0].astype(jnp.int32)
-        pid = jnp.where(want_net, free_idx[jnp.clip(rank, 0, free_idx.shape[0] - 1)], -1)
+        # overflow requesters (rank beyond the free list) get the -1 sentinel
+        # rather than the clipped last entry — clipping aliased two endpoints
+        # onto one packet id and corrupted the pool when cfg.pool < S.
+        in_free = rank < free_idx.shape[0]
+        pid = jnp.where(want_net & in_free,
+                        free_idx[jnp.clip(rank, 0, free_idx.shape[0] - 1)], -1)
         ok = want_net & (pid >= 0)
 
         # UGAL/Valiant: sample intermediate leaf & (UGAL) compare queue depths
@@ -263,6 +274,7 @@ class Simulator:
         n_local = deliver_local.sum(dtype=jnp.int32)
         st["created"] = st["created"] + ok.sum(dtype=jnp.int32) + n_local
         st["ejected"] = st["ejected"] + n_local
+        st["pool_stall"] = st["pool_stall"] + (want_net & ~ok).sum(dtype=jnp.int32)
         st["lat_hist"] = st["lat_hist"].at[1].add(n_local)
         return st
 
@@ -472,6 +484,52 @@ class Simulator:
         st, _ = jax.lax.scan(body, st, None, length=n_slots)
         return st
 
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def run_chunk_batch(self, st, traffic: Traffic, n_slots: int):
+        """``run_chunk`` vmapped over a leading ``[R]`` replica axis."""
+        def one(s):
+            def body(carry, _):
+                return self._step(carry, traffic), None
+            return jax.lax.scan(body, s, None, length=n_slots)[0]
+        return jax.vmap(one)(st)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 4, 5))
+    def _completion_loop(self, st, traffic: Traffic, expected,
+                         chunk: int, max_slots: int):
+        """Device-side completion detection: a ``lax.while_loop`` over
+        ``chunk``-slot scans that stops once every replica has ejected
+        ``expected`` packets (or ``max_slots`` elapsed).  ``done`` records
+        the *exact* slot at which each replica's ejection counter crossed
+        ``expected`` (-1 while still running) — completion resolution is one
+        slot, not one chunk, and there are no per-chunk host syncs.
+
+        Works on scalar state (0-d ``ejected``) and batched state alike:
+        the step is vmapped when a replica axis is present.
+        """
+        batched = st["ejected"].ndim == 1
+        step = lambda s: self._step(s, traffic)
+        if batched:
+            step = jax.vmap(step)
+        expected = jnp.asarray(expected, jnp.int32)
+
+        def slot_body(carry, _):
+            s, done = carry
+            s = step(s)
+            newly = (s["ejected"] >= expected) & (done < 0)
+            done = jnp.where(newly, s["slot"], done)
+            return (s, done), None
+
+        def chunk_body(carry):
+            return jax.lax.scan(slot_body, carry, None, length=chunk)[0]
+
+        def cond(carry):
+            s, done = carry
+            running = ~jnp.all(done >= 0)
+            return running & (jnp.max(s["slot"]) < max_slots)
+
+        done0 = jnp.full_like(st["ejected"], -1)
+        return jax.lax.while_loop(cond, chunk_body, (st, done0))
+
     # ------------------------------------------------------------------ #
     # high-level drivers
     # ------------------------------------------------------------------ #
@@ -491,17 +549,56 @@ class Simulator:
             st["key"] = jax.random.PRNGKey(self.cfg.seed + (seed << 16))
         return st
 
+    def make_batch_state(self, traffic: Traffic, seeds) -> dict:
+        """Stack R independently-seeded states on a leading replica axis.
+
+        Each replica's slice is exactly the state ``make_state(traffic, s)``
+        would produce — seed-dependent traffic permutations (``rep``/``rsp``)
+        and the PRNG stream both vary per replica — so a vmapped run is
+        replica-for-replica identical to R scalar runs.
+        """
+        states = [self.make_state(traffic, seed=int(s)) for s in seeds]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
     def run_throughput(self, traffic: Traffic, warm: int = 200,
                        measure: int = 400, seed: int = 0) -> dict:
         st = self.make_state(traffic, seed)
         st = self.run_chunk(st, traffic, warm)
-        e0 = int(st["ejected"])
+        e0, h0, ps0 = (int(st["ejected"]), int(st["hop_sum"]),
+                       int(st["pool_stall"]))
         st = self.run_chunk(st, traffic, measure)
-        e1, h1 = int(st["ejected"]), int(st["hop_sum"])
+        e1, h1, ps1 = (int(st["ejected"]), int(st["hop_sum"]),
+                       int(st["pool_stall"]))
         return {
             "throughput": (e1 - e0) / (self.S * measure),
-            "avg_hops": h1 / max(e1, 1),
+            # steady-state window only: the cumulative h1/e1 ratio used to
+            # fold warmup transients into the reported hop count
+            "avg_hops": (h1 - h0) / max(e1 - e0, 1),
             "ejected": e1,
+            "pool_stall": ps1 - ps0,
+            "state": st,
+        }
+
+    def run_throughput_batch(self, traffic: Traffic, seeds,
+                             warm: int = 200, measure: int = 400) -> dict:
+        """Batched ``run_throughput``: one compiled executable, R replicas.
+
+        Returns per-replica ``[R]`` arrays for every metric.
+        """
+        st = self.make_batch_state(traffic, seeds)
+        st = self.run_chunk_batch(st, traffic, warm)
+        e0 = np.asarray(st["ejected"])
+        h0 = np.asarray(st["hop_sum"])
+        ps0 = np.asarray(st["pool_stall"])
+        st = self.run_chunk_batch(st, traffic, measure)
+        e1 = np.asarray(st["ejected"])
+        h1 = np.asarray(st["hop_sum"])
+        ps1 = np.asarray(st["pool_stall"])
+        return {
+            "throughput": (e1 - e0) / (self.S * measure),
+            "avg_hops": (h1 - h0) / np.maximum(e1 - e0, 1),
+            "ejected": e1,
+            "pool_stall": ps1 - ps0,
             "state": st,
         }
 
@@ -515,27 +612,66 @@ class Simulator:
         hist = h1 - h0
         return {"hist": hist, **percentiles(hist, (0.5, 0.99, 0.9999))}
 
+    def run_latency_batch(self, traffic: Traffic, seeds,
+                          warm: int = 200, measure: int = 600) -> dict:
+        """Batched ``run_latency``: per-replica histograms and percentile
+        lists (``{"p0.5": [R floats], ...}``; NaN where a replica ejected
+        nothing in the window)."""
+        st = self.make_batch_state(traffic, seeds)
+        st = self.run_chunk_batch(st, traffic, warm)
+        h0 = np.asarray(st["lat_hist"])
+        st = self.run_chunk_batch(st, traffic, measure)
+        h1 = np.asarray(st["lat_hist"])
+        hist = h1 - h0                                           # [R, bins]
+        per = [percentiles(row, (0.5, 0.99, 0.9999)) for row in hist]
+        out = {"hist": hist}
+        for k in ("p0.5", "p0.99", "p0.9999"):
+            out[k] = np.asarray([p[k] for p in per])
+        return out
+
     def run_completion(self, traffic: Traffic, expected: int,
                        chunk: int = 128, max_slots: int = 100_000,
                        seed: int = 0, state: Optional[dict] = None) -> dict:
-        """Run until all ``expected`` packets are delivered (collectives)."""
+        """Run until all ``expected`` packets are delivered (collectives).
+
+        The chunk loop runs entirely on device (``lax.while_loop``); the
+        reported ``slots`` is the exact slot the ejection counter crossed
+        ``expected``, not the enclosing chunk boundary.  Accepts scalar or
+        batched (``make_batch_state``) state; with a replica axis, ``slots``
+        / ``completed`` / ``pool_stall`` come back as per-replica arrays and
+        the loop stops once *all* replicas have completed.
+        """
         st = state if state is not None else self.make_state(traffic, seed)
-        done_at = None
-        while int(st["slot"]) < max_slots:
-            st = self.run_chunk(st, traffic, chunk)
-            if int(st["ejected"]) >= expected:
-                done_at = int(st["slot"])
-                break
-        return {"slots": done_at or int(st["slot"]),
-                "completed": done_at is not None, "state": st}
+        st = {k: jnp.asarray(v) for k, v in st.items()}
+        st, done = self._completion_loop(st, traffic, expected, chunk,
+                                         max_slots)
+        done = np.asarray(done)
+        final = np.asarray(st["slot"])
+        slots = np.where(done >= 0, done, final)
+        completed = done >= 0
+        if done.ndim == 0:
+            return {"slots": int(slots), "completed": bool(completed),
+                    "pool_stall": int(st["pool_stall"]), "state": st}
+        return {"slots": slots, "completed": completed,
+                "pool_stall": np.asarray(st["pool_stall"]), "state": st}
+
+    def run_completion_batch(self, traffic: Traffic, expected: int, seeds,
+                             chunk: int = 128,
+                             max_slots: int = 100_000) -> dict:
+        """Batched ``run_completion`` over fresh per-seed replica states."""
+        return self.run_completion(
+            traffic, expected, chunk=chunk, max_slots=max_slots,
+            state=self.make_batch_state(traffic, seeds))
 
 
 def percentiles(hist: np.ndarray, qs) -> dict:
+    """Latency percentiles from a histogram whose bin index *is* the latency
+    in slots (packets are recorded at ``clip(slot - born + 1, ...)``)."""
     total = hist.sum()
     out = {}
     if total == 0:
         return {f"p{q}": float("nan") for q in qs}
     cum = np.cumsum(hist)
     for q in qs:
-        out[f"p{q}"] = int(np.searchsorted(cum, q * total) + 1)
+        out[f"p{q}"] = int(np.searchsorted(cum, q * total))
     return out

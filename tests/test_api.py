@@ -142,6 +142,11 @@ def test_run_allreduce_first_class():
     assert res.completed
     assert res.slots == sum(res.phase_slots)
     assert len(res.phase_slots) == 2 * 4          # log2(16) each direction
+    # completion counts ALL deliveries (incl. self-partnered local ones), so
+    # no phase can finish faster than its per-endpoint packet count
+    from repro.core.collectives import rabenseifner_phases
+    assert all(s >= ph["packets"] for s, ph in
+               zip(res.phase_slots, rabenseifner_phases(16, 8)))
     # result record JSON round-trips
     again = Result.from_json(res.to_json())
     assert again == res
@@ -193,12 +198,116 @@ def test_expand_axes_fabric_outermost():
     assert policies == ["polarized", "polarized", "ksp", "ksp"]
 
 
+def test_expand_axes_seed_varies_fastest():
+    # seed innermost regardless of insertion order, so run_all can fold
+    # each seed-only stretch into one batched run
+    base = Experiment(network=TINY, route=ROUTE)
+    grid = expand_axes(base, {"seed": [0, 1], "workload.load": [0.2, 0.4]})
+    coords = [(e.workload.load, e.seed) for e in grid]
+    assert coords == [(0.2, 0), (0.2, 1), (0.4, 0), (0.4, 1)]
+
+
 def test_expand_axes_relabels_named_base():
     base = Experiment(network=TINY, route=ROUTE, name="fig.base")
     grid = expand_axes(base, {"route.policy": ["polarized", "ksp"]})
     names = [e.label() for e in grid]
     assert names == ["fig.base[route.policy=polarized]",
                      "fig.base[route.policy=ksp]"]
+
+
+# ---------------------------------------------------------------------- #
+# batched replicas: vmapped runs must match scalar runs bitwise
+# ---------------------------------------------------------------------- #
+FT = NetworkSpec("fat_tree", {"radix": 4, "h": 1})
+FT_ROUTE = RouteSpec(policy="minimal_adaptive", max_hops=4, pool=4096)
+
+
+@pytest.mark.parametrize("net,route", [(TINY, ROUTE), (FT, FT_ROUTE)],
+                         ids=["mrls", "fat_tree"])
+def test_batched_throughput_parity_with_scalar(net, route):
+    base = dict(network=net, route=route,
+                workload=WorkloadSpec("uniform", load=0.5),
+                warm=30, measure=60)
+    with SimulatorCache() as cache:
+        res = run(Experiment(replicas=4, seed=1, **base), cache=cache)
+        assert res.replica_seeds == (1, 2, 3, 4)
+        for i, s in enumerate(res.replica_seeds):
+            ref = run(Experiment(seed=s, **base), cache=cache)
+            # bitwise, not approx: replica i IS the scalar run with seed s
+            assert res.per_replica["throughput"][i] == ref.throughput
+            assert res.per_replica["avg_hops"][i] == ref.avg_hops
+            assert res.per_replica["ejected"][i] == ref.ejected
+    agg = res.aggregates["throughput"]
+    assert agg["min"] <= res.throughput <= agg["max"]
+    assert res.throughput == pytest.approx(
+        np.mean(res.per_replica["throughput"]))
+
+
+@pytest.mark.parametrize("net,route", [(TINY, ROUTE), (FT, FT_ROUTE)],
+                         ids=["mrls", "fat_tree"])
+def test_batched_completion_parity_and_exact_slots(net, route):
+    base = dict(network=net, route=route,
+                workload=WorkloadSpec("all2all", rounds=3),
+                chunk=64, max_slots=4000)
+    with SimulatorCache() as cache:
+        res = run(Experiment(replicas=4, **base), cache=cache)
+        assert res.completed
+        sim = cache.get(net, route)
+        for i, s in enumerate(res.replica_seeds):
+            ref = run(Experiment(seed=s, **base), cache=cache)
+            assert res.per_replica["slots"][i] == ref.slots      # bitwise
+            assert res.per_replica["completed"][i] == ref.completed
+            # exact completion slot <= the old chunk-granular loop's value
+            tr = Traffic("all2all", rounds=3)
+            st = sim.make_state(tr, seed=s)
+            while int(st["slot"]) < 4000:
+                st = sim.run_chunk(st, tr, 64)
+                if int(st["ejected"]) >= sim.S * 3:
+                    break
+            old_chunk_granular = int(st["slot"])
+            assert ref.slots <= old_chunk_granular < ref.slots + 64
+
+
+def test_batched_allreduce_parity_with_scalar():
+    base = dict(network=TINY, route=ROUTE,
+                workload=WorkloadSpec("allreduce", ranks=16, vec_packets=8),
+                max_slots=3000)
+    with SimulatorCache() as cache:
+        res = run(Experiment(replicas=2, **base), cache=cache)
+        assert res.completed and res.metric == "completion"
+        for i, s in enumerate(res.replica_seeds):
+            ref = run(Experiment(seed=s, **base), cache=cache)
+            assert res.per_replica["slots"][i] == ref.slots
+            assert res.per_replica["phase_slots"][i] == ref.phase_slots
+
+
+def test_batched_result_json_roundtrip():
+    res = run(Experiment(network=TINY, route=ROUTE,
+                         workload=WorkloadSpec("uniform", load=0.5),
+                         warm=20, measure=40, replicas=3))
+    assert res.replica_seeds == (0, 1, 2)
+    assert set(res.aggregates) >= {"throughput", "avg_hops", "ejected"}
+    again = Result.from_json(res.to_json())
+    assert again == res
+
+
+def test_replicas_validation_and_seeds():
+    with pytest.raises(ValueError, match="replicas"):
+        Experiment(network=TINY, replicas=0)
+    exp = Experiment(network=TINY, seed=5, replicas=3)
+    assert exp.replica_seeds() == (5, 6, 7)
+    assert Experiment.from_json(exp.to_json()) == exp
+
+
+def test_sweep_folds_seed_axis_same_results():
+    base = Experiment(network=TINY, route=ROUTE,
+                      workload=WorkloadSpec("uniform", load=0.5),
+                      warm=20, measure=40)
+    axes = {"workload.load": [0.2, 0.4], "seed": [0, 1, 2]}
+    folded = sweep(base, axes)
+    scalar = sweep(base, axes, fold_seeds=False)
+    assert len(folded) == 6
+    assert folded == scalar       # fold is an optimization, not a semantic
 
 
 # ---------------------------------------------------------------------- #
@@ -232,6 +341,23 @@ def test_cli_run_spec_json(tmp_path, capsys):
     assert len(records) == 1
     res = Result.from_dict(records[0])
     assert res.experiment == exp and res.throughput is not None
+
+
+def test_cli_run_replicas_flag(tmp_path, capsys):
+    from repro.api.cli import main
+
+    exp = Experiment(network=TINY, route=ROUTE,
+                     workload=WorkloadSpec("uniform", load=0.5),
+                     name="cli.batched", warm=20, measure=40)
+    spec = tmp_path / "spec.json"
+    spec.write_text(exp.to_json())
+    out = tmp_path / "results.json"
+    assert main(["run", str(spec), "--replicas", "2",
+                 "--out", str(out)]) == 0
+    assert "replicas=2" in capsys.readouterr().out
+    res = Result.from_dict(json.loads(out.read_text())[0])
+    assert res.experiment.replicas == 2
+    assert len(res.per_replica["throughput"]) == 2
 
 
 def test_cli_sweep_spec_json(tmp_path):

@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import mrls, oft, fat_tree, build_tables
 from repro.core.collectives import rabenseifner_phases
-from repro.simulator.engine import Simulator, SimConfig, Traffic
+from repro.simulator.engine import (Simulator, SimConfig, Traffic,
+                                    percentiles)
 
 
 @pytest.fixture(scope="module")
@@ -69,12 +70,86 @@ def test_rabenseifner_phases_on_sim():
         partner = np.arange(sim.S, dtype=np.int32)   # self = no-op beyond n
         partner[:n] = ph["partner"]
         state["partner"] = np.asarray(partner)
-        expected = int((partner[:n] != np.arange(n)).sum()) * ph["packets"]
+        # every endpoint delivers its whole message (self-partnered ones via
+        # the local fast path), so completion is all S*packets deliveries
+        expected = sim.S * ph["packets"]
         r = sim.run_completion(tr, expected=expected, max_slots=3000,
                                state=state)
         assert r["completed"]
+        # NIC injects 1 packet/slot, so a phase can't beat its packet count
+        assert r["slots"] >= ph["packets"]
         total_slots += r["slots"]
     assert total_slots > 0
+
+
+def test_percentiles_pinned_on_hand_built_histogram():
+    # bin index IS the latency in slots: 50 packets at 2 slots, 49 at 10,
+    # 1 at 30 -> p50 = 2 (cum hits exactly 50 there), p99 = 10, p9999 = 30.
+    hist = np.zeros(64, np.int64)
+    hist[2], hist[10], hist[30] = 50, 49, 1
+    p = percentiles(hist, (0.5, 0.99, 0.9999))
+    assert p["p0.5"] == 2
+    assert p["p0.99"] == 10
+    assert p["p0.9999"] == 30
+    # empty window -> NaN, not a crash
+    assert np.isnan(percentiles(np.zeros(8, np.int64), (0.5,))["p0.5"])
+
+
+def test_avg_hops_excludes_warmup_window(tiny):
+    # run once with a warmup and once measuring from slot 0: the windowed
+    # avg_hops must equal the manual (h1-h0)/(e1-e0) over the same window.
+    tr = Traffic("uniform", load=0.5)
+    st = tiny.make_state(tr, seed=3)
+    st = tiny.run_chunk(st, tr, 100)
+    e0, h0 = int(st["ejected"]), int(st["hop_sum"])
+    st = tiny.run_chunk(st, tr, 150)
+    e1, h1 = int(st["ejected"]), int(st["hop_sum"])
+    r = tiny.run_throughput(tr, warm=100, measure=150, seed=3)
+    assert r["avg_hops"] == pytest.approx((h1 - h0) / max(e1 - e0, 1))
+    assert r["avg_hops"] != pytest.approx(h1 / max(e1, 1))  # old cumulative
+
+
+def test_pool_overflow_routes_to_sentinel_not_alias():
+    # pool (8) far smaller than endpoints (42): overflow injectors must
+    # stall (pool_stall), never alias two endpoints onto one packet id —
+    # aliasing shows up as a packet-conservation violation.
+    t = mrls(14, u=3, d=3, seed=0)
+    sim = Simulator(build_tables(t), SimConfig(policy="polarized",
+                                               max_hops=10, pool=8))
+    r = sim.run_throughput(Traffic("uniform", load=1.0), warm=50, measure=100)
+    st = r["state"]
+    in_flight = int((~np.asarray(st["p_free"])).sum())
+    assert int(st["created"]) == int(st["ejected"]) + in_flight
+    assert r["pool_stall"] > 0          # starvation is visible, not silent
+
+
+def test_completion_slot_is_exact_not_chunk_granular(tiny):
+    rounds, chunk = 4, 64
+    S = tiny.S
+    tr = Traffic("all2all", rounds=rounds)
+    r = tiny.run_completion(tr, expected=S * rounds, chunk=chunk,
+                            max_slots=4000, seed=5)
+    assert r["completed"]
+    # emulate the old host-loop: advance in whole chunks, stop at the first
+    # chunk boundary where the program has completed
+    st = tiny.make_state(tr, seed=5)
+    while int(st["slot"]) < 4000:
+        st = tiny.run_chunk(st, tr, chunk)
+        if int(st["ejected"]) >= S * rounds:
+            break
+    old_slots = int(st["slot"])
+    assert r["slots"] <= old_slots < r["slots"] + chunk
+
+
+def test_batched_state_matches_scalar_runs(tiny):
+    tr = Traffic("uniform", load=0.5)
+    seeds = [0, 1, 2, 3]
+    rb = tiny.run_throughput_batch(tr, seeds, warm=30, measure=60)
+    for i, s in enumerate(seeds):
+        rs = tiny.run_throughput(tr, warm=30, measure=60, seed=s)
+        assert rs["throughput"] == rb["throughput"][i]   # bitwise
+        assert rs["avg_hops"] == rb["avg_hops"][i]
+        assert rs["ejected"] == rb["ejected"][i]
 
 
 def test_latency_percentiles_reasonable():
