@@ -1,0 +1,452 @@
+"""Per-slot step-loop speedup demo (ISSUE 3 acceptance criterion).
+
+Isolates slots/sec of the simulator ``_step`` hot path before vs. after the
+device-resident overhaul (compact routing tables + O(S) free-list +
+donated buffers).  Same method as ``bench_replicas.py``: each variant runs
+in its own subprocess so every timing is a clean cold-start wall clock.
+
+* ``before`` — the pre-overhaul step, emulated faithfully by
+  :class:`LegacySimulator`: full ``jnp.nonzero`` pool scan per inject,
+  ``[NR, P]`` int32 distance-row gathers per crossbar sub-round, inline
+  index arithmetic, and un-donated chunk state.
+* ``after``  — the current engine (``backend="xla"``): compact bitmask /
+  int16 tables, ring-buffer free-list, static requester geometry, donated
+  buffers.
+* ``pallas`` — optional (``--pallas``): the fused arbitration kernel in
+  interpret mode (Python-executed kernel body — a correctness path on CPU,
+  not a fast one).
+
+Emits ``name,us_total,derived`` rows plus a machine-readable
+``BENCH_step.json`` (``--out``).  ``--check BASELINE.json`` exits non-zero
+if the measured before/after speedup regresses more than 20% below the
+committed baseline's speedup for the same fabric (the ratio is measured
+on one machine in one run, so the gate is insensitive to CI host speed;
+absolute slots/sec vs the baseline host is printed for context).
+Acceptance: after >= 2x before on the 1008-endpoint MRLS all2all loop.
+"""
+import functools
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+FABRICS = {
+    # name -> (mrls builder kwargs, timed slots per rep, reps)
+    "tiny": ({"n_leaves": 14, "u": 3, "d": 3, "seed": 0}, 256, 5),
+    "mrls1008": ({"n_leaves": 168, "u": 6, "d": 6, "seed": 1}, 64, 5),
+    # the paper's 104976-endpoint f=1 MRLS (CPU-hours; for TPU hosts)
+    "full": ({"n_leaves": 5832, "u": 18, "d": 18, "seed": 1}, 8, 2),
+}
+REGRESSION_TOLERANCE = 0.20
+
+
+def _make_legacy_class():
+    """Subclass emulating the pre-overhaul step (old gather/scan hot path).
+
+    Built lazily so importing this file stays cheap for ``--help``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.routing import polarized_port_mask
+    from repro.simulator.engine import BIG, Simulator
+
+    class LegacySimulator(Simulator):
+        """Pre-ISSUE-3 step: nonzero pool scan, [NR,P] int32 distance
+        gathers, per-round index arithmetic, no buffer donation."""
+
+        def __init__(self, tables, cfg):
+            super().__init__(tables, cfg)
+            self.dist32 = jnp.asarray(tables.dist_leaf, jnp.int32)
+
+        def init_state(self, traffic, seed_arrays):
+            # restore the pre-overhaul per-packet layout: free bitmap +
+            # unpacked src/dst/born/hops arrays
+            st = super().init_state(traffic, seed_arrays)
+            st["p_free"] = jnp.ones(self.pool, bool)
+            for k in ("p_src", "p_dst", "p_dst_sw", "p_born", "p_hops"):
+                st[k] = jnp.zeros(self.pool, jnp.int32)
+            return st
+
+        # -------------------------------------------------------------- #
+        def _inject(self, st, key, traffic):
+            S, d = self.S, self.d_leaf
+            e = jnp.arange(S, dtype=jnp.int32)
+            k1, k2, k3, k4 = jax.random.split(key, 4)
+
+            idle = st["msg_rem"] == 0
+            pat = traffic.pattern
+            assert pat == "all2all", "legacy emulation benches all2all only"
+            start = idle & (st["prog"] < traffic.rounds)
+            dst = (e + st["prog"] + 1) % S
+            size = jnp.ones((S,), jnp.int32)
+
+            msg_rem = jnp.where(start, size, st["msg_rem"])
+            msg_dst = jnp.where(start, dst, st["msg_dst"])
+            prog = st["prog"] + start.astype(jnp.int32)
+
+            want = (msg_rem > 0) & (st["eq_len"] < self.QE)
+            src_lr = e // d
+            dst_lr = msg_dst // d
+            local = src_lr == dst_lr
+            deliver_local = want & local
+            want_net = want & ~local
+
+            # the old O(pool) allocator: full free-bitmap compaction
+            rank = jnp.cumsum(want_net.astype(jnp.int32)) - 1
+            free_idx = jnp.nonzero(st["p_free"], size=min(S, self.pool),
+                                   fill_value=-1)[0].astype(jnp.int32)
+            in_free = rank < free_idx.shape[0]
+            pid = jnp.where(want_net & in_free,
+                            free_idx[jnp.clip(rank, 0, free_idx.shape[0] - 1)],
+                            -1)
+            ok = want_net & (pid >= 0)
+
+            mid = jnp.full((S,), -1, jnp.int32)
+            if self.cfg.policy in ("ugal", "valiant"):
+                mid_lr = jax.random.randint(k4, (S,), 0, self.n1)
+                if self.cfg.policy == "ugal":
+                    sw = self.leaf_ids[src_lr]
+                    nb = self.nbrs0[sw]
+                    occ0 = st["qlen"].reshape(self.N, self.P, self.V)[
+                        nb, self.nbr_port[sw], 0]
+                    vp = self.valid_port[sw]
+
+                    def best(t_lr):
+                        d_n = self.dist32[t_lr[:, None], nb]
+                        d_c = self.dist32[t_lr, sw]
+                        m = vp & (d_n == d_c[:, None] - 1)
+                        return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
+
+                    q_min = best(dst_lr)
+                    q_val = best(mid_lr)
+                    d_min = self.dist32[dst_lr, sw]
+                    d_val = (self.dist32[mid_lr, sw]
+                             + self.dist32[dst_lr, self.leaf_ids[mid_lr]])
+                    take_val = q_min * d_min > q_val * d_val
+                    mid = jnp.where(take_val, mid_lr, -1)
+                else:
+                    mid = mid_lr
+
+            widx = jnp.where(ok, jnp.maximum(pid, 0), self.pool)
+            st = dict(st)
+            st["p_free"] = st["p_free"].at[widx].set(False, mode="drop")
+            st["p_src"] = st["p_src"].at[widx].set(src_lr, mode="drop")
+            st["p_dst"] = st["p_dst"].at[widx].set(dst_lr, mode="drop")
+            st["p_dst_sw"] = st["p_dst_sw"].at[widx].set(
+                self.leaf_ids[dst_lr], mode="drop")
+            st["p_mid"] = st["p_mid"].at[widx].set(mid, mode="drop")
+            st["p_born"] = st["p_born"].at[widx].set(st["slot"], mode="drop")
+            st["p_hops"] = st["p_hops"].at[widx].set(0, mode="drop")
+            pos = (st["eq_head"] + st["eq_len"]) % self.QE
+            st["eq_buf"] = st["eq_buf"].at[e, jnp.where(ok, pos, self.QE)].set(
+                jnp.maximum(pid, 0), mode="drop")
+            st["eq_len"] = st["eq_len"] + ok.astype(jnp.int32)
+
+            consumed = ok | deliver_local
+            st["msg_rem"] = msg_rem - consumed.astype(jnp.int32)
+            st["msg_dst"] = msg_dst
+            st["prog"] = prog
+            n_local = deliver_local.sum(dtype=jnp.int32)
+            st["created"] = st["created"] + ok.sum(dtype=jnp.int32) + n_local
+            st["ejected"] = st["ejected"] + n_local
+            st["pool_stall"] = st["pool_stall"] + (want_net & ~ok).sum(
+                dtype=jnp.int32)
+            st["lat_hist"] = st["lat_hist"].at[1].add(n_local)
+            return st
+
+        # -------------------------------------------------------------- #
+        def _crossbar_round(self, st, key, ep_active):
+            N, P, V, Q, S = self.N, self.P, self.V, self.Q, self.S
+            OQ = self.cfg.out_queue
+            k_vc, k_tie, k_arb = jax.random.split(key, 3)
+
+            qlen3 = st["qlen"].reshape(N, P, V)
+            vc_prio = jax.random.uniform(k_vc, (N, P, V))
+            vc_prio = jnp.where(qlen3 > 0, vc_prio, -1.0)
+            vc_sel = jnp.argmax(vc_prio, axis=2)
+            has_pkt = jnp.take_along_axis(
+                qlen3, vc_sel[:, :, None], 2)[:, :, 0] > 0
+
+            q_idx = (jnp.arange(N * P, dtype=jnp.int32).reshape(N, P) * V
+                     + vc_sel.astype(jnp.int32)).reshape(-1)
+            head = st["qbuf"].reshape(-1)[q_idx * Q + st["qhead"][q_idx]]
+            net_pkt = jnp.where(has_pkt.reshape(-1), head, -1)
+
+            ep_head = st["eq_buf"].reshape(-1)[
+                jnp.arange(S, dtype=jnp.int32) * self.QE + st["eq_head"]]
+            ep_pkt = jnp.where((st["eq_len"] > 0) & ep_active, ep_head, -1)
+
+            cur_net = jnp.repeat(jnp.arange(N, dtype=jnp.int32), P)
+            cur_ep = self.leaf_ids[jnp.arange(S, dtype=jnp.int32) // self.d_leaf]
+            cur = jnp.concatenate([cur_net, cur_ep])
+            pkt = jnp.concatenate([net_pkt, ep_pkt])
+            NR = cur.shape[0]
+            valid = pkt >= 0
+            pkt0 = jnp.maximum(pkt, 0)
+
+            s_lr, t_lr = st["p_src"][pkt0], st["p_dst"][pkt0]
+            hops = st["p_hops"][pkt0]
+            dst_sw = st["p_dst_sw"][pkt0]
+            mid_lr = st["p_mid"][pkt0]
+
+            eject = valid & (cur == dst_sw)
+            route = valid & ~eject
+
+            nb = self.nbrs0[cur]
+            vp = self.valid_port[cur]
+            dflat = self.dist32.reshape(-1)
+            d_ct = dflat[t_lr * N + cur]
+            d_nt = dflat[(t_lr * N)[:, None] + nb]           # [NR,P] gather
+
+            pol = self.cfg.policy
+            if pol == "polarized":
+                d_cs = dflat[s_lr * N + cur]
+                d_ns = dflat[(s_lr * N)[:, None] + nb]       # [NR,P] gather
+                allowed, deroute = polarized_port_mask(
+                    d_cs[:, None], d_ct[:, None], d_ns, d_nt,
+                    hops[:, None], self.cfg.max_hops, vp)
+                next_vc = jnp.minimum(hops // 2, V - 1)
+            elif pol in ("minimal_adaptive", "ksp"):
+                allowed = vp & (d_nt == d_ct[:, None] - 1)
+                deroute = jnp.zeros_like(allowed)
+                next_vc = jnp.minimum(hops // 2, V - 1)
+            elif pol in ("ugal", "valiant"):
+                tgt = jnp.where(mid_lr >= 0, mid_lr, t_lr)
+                d_cg = dflat[tgt * N + cur]
+                d_ng = dflat[(tgt * N)[:, None] + nb]
+                allowed = vp & (d_ng == d_cg[:, None] - 1)
+                deroute = jnp.zeros_like(allowed)
+                next_vc = jnp.minimum(hops, V - 1)
+            else:
+                raise ValueError(pol)
+
+            oq_idx = (cur[:, None] * P
+                      + jnp.arange(P, dtype=jnp.int32)[None, :]) * V \
+                + next_vc[:, None]
+            dq_idx = (nb * P + self.nbr_port[cur]) * V + next_vc[:, None]
+            occ = st["oq_len"][oq_idx] + st["qlen"][dq_idx]
+            credit = st["oq_len"][oq_idx] < OQ
+            score = (occ.astype(jnp.float32)
+                     + self.cfg.deroute_penalty * deroute
+                     + jax.random.uniform(k_tie, (NR, P)))
+            if pol == "ksp":
+                score = jax.random.uniform(k_tie, (NR, P))
+            score = jnp.where(allowed & credit, score, BIG)
+            port = jnp.argmin(score, axis=1).astype(jnp.int32)
+            can_move = route & (jnp.min(score, axis=1) < BIG)
+
+            out_key = cur * P + port
+            rnd = jax.random.randint(k_arb, (NR,), 0, 1 << 8, dtype=jnp.int32)
+            prio = (rnd << 23) | jnp.arange(NR, dtype=jnp.int32)
+            prio = jnp.where(can_move, prio, -1)
+            seg = jnp.full((N * P,), -1, jnp.int32).at[out_key].max(prio)
+            win = can_move & (seg[out_key] == prio)
+
+            tgt_q = oq_idx[jnp.arange(NR), port]
+            tgt_pos = tgt_q * OQ + (st["oq_head"][tgt_q]
+                                    + st["oq_len"][tgt_q]) % OQ
+            oq_buf = st["oq_buf"].reshape(-1)
+            oq_buf = oq_buf.at[jnp.where(win, tgt_pos, oq_buf.shape[0])].set(
+                pkt0, mode="drop")
+            oq_len = st["oq_len"].at[jnp.where(win, tgt_q, self.NQ)].add(
+                1, mode="drop")
+
+            leave = win | eject
+            net_leave = leave[: N * P]
+            qi = jnp.where(net_leave, q_idx, self.NQ)
+            qhead = st["qhead"].at[qi].add(1, mode="drop") % Q
+            qlen = st["qlen"].at[qi].add(-1, mode="drop")
+            ep_leave = leave[N * P:]
+            eq_head = (st["eq_head"] + ep_leave.astype(jnp.int32)) % self.QE
+            eq_len = st["eq_len"] - ep_leave.astype(jnp.int32)
+
+            p_free = st["p_free"].at[jnp.where(eject, pkt0, self.pool)].set(
+                True, mode="drop")
+            lat = jnp.clip(st["slot"] - st["p_born"][pkt0] + 1, 0,
+                           self.cfg.hist_bins - 1)
+            lat_hist = st["lat_hist"].at[jnp.where(eject, lat, 0)].add(
+                jnp.where(eject, 1, 0))
+
+            st = dict(st)
+            st["oq_buf"] = oq_buf.reshape(self.NQ, OQ)
+            st["oq_len"] = oq_len
+            st["qhead"], st["qlen"] = qhead, qlen
+            st["eq_head"], st["eq_len"] = eq_head, eq_len
+            st["p_free"] = p_free
+            st["lat_hist"] = lat_hist
+            st["ejected"] = st["ejected"] + eject.sum(dtype=jnp.int32)
+            st["hop_sum"] = st["hop_sum"] + jnp.where(eject, hops, 0).sum(
+                dtype=jnp.int32)
+            return st
+
+        # -------------------------------------------------------------- #
+        def _link_phase(self, st, key):
+            N, P, V, Q = self.N, self.P, self.V, self.Q
+            OQ = self.cfg.out_queue
+            oq_len3 = st["oq_len"].reshape(N, P, V)
+            np_idx = jnp.arange(N * P, dtype=jnp.int32)
+            sw = np_idx // P
+            pt = np_idx % P
+            nb = self.nbrs0[sw, pt]
+            nbp = self.nbr_port[sw, pt]
+            link_ok = self.valid_port[sw, pt]
+            dq = (nb[:, None] * P + nbp[:, None]) * V + jnp.arange(
+                V, dtype=jnp.int32)
+            room = st["qlen"][dq] < Q
+            nonempty = oq_len3.reshape(N * P, V) > 0
+            cand = nonempty & room & link_ok[:, None]
+            prio = jnp.where(cand, jax.random.uniform(key, (N * P, V)), -1.0)
+            vcs = jnp.argmax(prio, axis=1).astype(jnp.int32)
+            send = jnp.take_along_axis(cand, vcs[:, None], 1)[:, 0]
+
+            src_q = np_idx * V + vcs
+            pkt = st["oq_buf"].reshape(-1)[src_q * OQ + st["oq_head"][src_q]]
+            pkt0 = jnp.maximum(pkt, 0)
+            tgt_q = dq[np_idx, vcs]
+            tgt_pos = tgt_q * Q + (st["qhead"][tgt_q] + st["qlen"][tgt_q]) % Q
+
+            qbuf = st["qbuf"].reshape(-1)
+            qbuf = qbuf.at[jnp.where(send, tgt_pos, qbuf.shape[0])].set(
+                pkt0, mode="drop")
+            qlen = st["qlen"].at[jnp.where(send, tgt_q, self.NQ)].add(
+                1, mode="drop")
+            sq = jnp.where(send, src_q, self.NQ)
+            oq_head = st["oq_head"].at[sq].add(1, mode="drop") % OQ
+            oq_len = st["oq_len"].at[sq].add(-1, mode="drop")
+            p_hops = st["p_hops"].at[jnp.where(send, pkt0, self.pool)].add(
+                1, mode="drop")
+            mid_lr = st["p_mid"][pkt0]
+            reached_mid = send & (mid_lr >= 0) & (
+                nb == self.leaf_ids[jnp.maximum(mid_lr, 0)])
+            p_mid = st["p_mid"].at[jnp.where(reached_mid, pkt0, self.pool)
+                                   ].set(-1, mode="drop")
+
+            st = dict(st)
+            st["qbuf"] = qbuf.reshape(self.NQ, Q)
+            st["qlen"] = qlen
+            st["oq_head"], st["oq_len"] = oq_head, oq_len
+            st["p_hops"], st["p_mid"] = p_hops, p_mid
+            return st
+
+        # un-donated chunk runner (the old double-buffering behaviour)
+        @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+        def run_chunk(self, st, traffic, n_slots):
+            def body(carry, _):
+                return self._step(carry, traffic), None
+            return jax.lax.scan(body, st, None, length=n_slots)[0]
+
+    return LegacySimulator
+
+
+# ---------------------------------------------------------------------- #
+def _measure(sim, n_slots: int, reps: int) -> float:
+    """slots/sec of the compiled step loop (compile + warm rep excluded).
+
+    Best-of-reps: each rep is timed separately and the fastest wins, so a
+    background-load hiccup in one rep doesn't skew the comparison.
+    """
+    import jax
+    from repro.simulator.engine import Traffic
+    tr = Traffic("all2all", rounds=1 << 30)     # injectors never go idle
+    st = sim.make_state(tr, 0)
+    st = jax.block_until_ready(sim.run_chunk(st, tr, n_slots))   # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        st = jax.block_until_ready(sim.run_chunk(st, tr, n_slots))
+        best = min(best, time.perf_counter() - t0)
+    return n_slots / best
+
+
+def _child(phase: str, fabric: str, policy: str):
+    from repro.core import mrls, build_tables
+    from repro.simulator.engine import Simulator, SimConfig
+    params, n_slots, reps = FABRICS[fabric]
+    tables = build_tables(mrls(**params))
+    cfg = SimConfig(policy=policy, max_hops=10,
+                    backend="pallas" if phase == "pallas" else "xla")
+    cls = _make_legacy_class() if phase == "before" else Simulator
+    sim = cls(tables, cfg)
+    sps = _measure(sim, n_slots, reps)
+    print(json.dumps({"slots_per_sec": sps}))
+
+
+def _spawn(phase: str, fabric: str, policy: str) -> float:
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()),
+         "--phase", phase, "--fabric", fabric, "--policy", policy],
+        check=True, capture_output=True, text=True, cwd=str(_ROOT))
+    return json.loads(out.stdout.strip().splitlines()[-1])["slots_per_sec"]
+
+
+def main(fabric: str, policy: str, out_path, check_path, with_pallas: bool):
+    from benchmarks.common import emit
+    before = _spawn("before", fabric, policy)
+    after = _spawn("after", fabric, policy)
+    record = {"policy": policy,
+              "before_slots_per_sec": before,
+              "after_slots_per_sec": after,
+              "speedup": after / before}
+    emit(f"bench_step.{fabric}.before", 1e6 / before,
+         f"{before:.1f} slots/s")
+    emit(f"bench_step.{fabric}.after", 1e6 / after, f"{after:.1f} slots/s")
+    emit(f"bench_step.{fabric}.speedup", 0.0, f"{after / before:.2f}x")
+    if with_pallas:
+        pallas = _spawn("pallas", fabric, policy)
+        record["pallas_interpret_slots_per_sec"] = pallas
+        emit(f"bench_step.{fabric}.pallas_interpret", 1e6 / pallas,
+             f"{pallas:.1f} slots/s")
+
+    if out_path:
+        doc = {}
+        p = pathlib.Path(out_path)
+        if p.exists():
+            doc = json.loads(p.read_text())
+        doc[fabric] = record
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {p}")
+
+    if check_path:
+        base = json.loads(pathlib.Path(check_path).read_text()).get(fabric)
+        if base is None:
+            print(f"no committed baseline for fabric {fabric!r}; skipping "
+                  "regression check")
+        else:
+            # the hard gate is the before/after SPEEDUP, which compares two
+            # measurements from this same machine and so is insensitive to
+            # how fast the CI runner happens to be; absolute slots/sec
+            # against the baseline host is reported for context only
+            ref_speedup = base["speedup"]
+            floor = (1 - REGRESSION_TOLERANCE) * ref_speedup
+            speedup = after / before
+            abs_ref = base["after_slots_per_sec"]
+            print(f"context: after={after:.1f} slots/s vs baseline host "
+                  f"{abs_ref:.1f} ({after / abs_ref:.2f}x of baseline)")
+            status = "OK" if speedup >= floor else "REGRESSION"
+            print(f"regression check [{status}]: speedup={speedup:.2f}x "
+                  f"vs committed {ref_speedup:.2f}x (floor {floor:.2f}x)")
+            if speedup < floor:
+                sys.exit(1)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+
+    def _opt(flag, default):
+        return argv[argv.index(flag) + 1] if flag in argv else default
+    _fabric = _opt("--fabric", "mrls1008")
+    if "--full" in argv:
+        _fabric = "full"
+    _policy = _opt("--policy", "polarized")
+    _phase = _opt("--phase", None)
+    if _phase:
+        _child(_phase, _fabric, _policy)
+    else:
+        main(_fabric, _policy, _opt("--out", None), _opt("--check", None),
+             "--pallas" in argv)

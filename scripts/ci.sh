@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 CI: test suite + declarative-API smoke run.
+# Tier-1 CI: test suite + declarative-API smoke run + step-loop benchmark.
 #   bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,5 +16,11 @@ echo "== smoke: batched (vmapped) replicas=2 completion run =="
 mkdir -p artifacts
 python -m repro.api run examples/specs/tiny_mrls_a2a.json \
     --replicas 2 --out artifacts/batched_smoke_result.json
+
+echo "== bench: step-loop slots/sec on the tiny fabric =="
+# emits artifacts/BENCH_step.json and fails if the post-overhaul engine
+# regresses >20% against the committed benchmarks/BENCH_step.json baseline
+python benchmarks/bench_step.py --fabric tiny \
+    --out artifacts/BENCH_step.json --check benchmarks/BENCH_step.json
 
 echo "CI OK"

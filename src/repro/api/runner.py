@@ -60,8 +60,10 @@ class Result:
 
     Only the fields relevant to ``metric`` are populated; the rest stay
     ``None``.  ``latency`` maps percentile labels (``p50``/``p99``/
-    ``p9999``) to slot counts; ``phase_slots`` holds per-phase completion
-    slots for collectives with a phase schedule (allreduce).
+    ``p9999``) to slot counts — uniformly ``float`` (``None`` when the
+    measurement window ejected nothing), never a mix of int and float;
+    ``phase_slots`` holds per-phase completion slots for collectives with
+    a phase schedule (allreduce).
 
     For a batched run (``experiment.replicas > 1``) the scalar metric
     fields hold the across-replica *mean* (``completed`` is the AND), and
@@ -77,7 +79,7 @@ class Result:
     avg_hops: Optional[float] = None
     ejected: Optional[float] = None
     pool_stall: Optional[float] = None
-    latency: Optional[Mapping[str, int]] = None
+    latency: Optional[Mapping[str, float]] = None
     slots: Optional[float] = None
     completed: Optional[bool] = None
     phase_slots: Optional[Tuple[float, ...]] = None
@@ -301,7 +303,7 @@ def _batched_metrics(sim: Simulator, exp: Experiment, seeds) -> Tuple[str, dict]
                                   measure=exp.measure)
 
         def _p(v):
-            return None if np.isnan(v) else int(v)
+            return None if np.isnan(v) else float(v)
         return metric, {
             "p50": tuple(_p(v) for v in r["p0.5"]),
             "p99": tuple(_p(v) for v in r["p0.99"]),
@@ -482,7 +484,7 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
         # zero ejections in the window -> NaN percentiles; map to None so
         # the Result stays strict-JSON and round-trips losslessly
         def _p(v):
-            return None if isinstance(v, float) and np.isnan(v) else int(v)
+            return None if isinstance(v, float) and np.isnan(v) else float(v)
         lat = {"p50": _p(r["p0.5"]), "p99": _p(r["p0.99"]),
                "p9999": _p(r["p0.9999"])}
         return Result(experiment=exp, metric=metric, latency=lat)

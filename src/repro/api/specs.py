@@ -84,7 +84,10 @@ class RouteSpec:
     """Routing policy plus the switch resources it runs on.
 
     Mirrors :class:`repro.simulator.engine.SimConfig` minus the sim-RNG
-    seed (which belongs to the :class:`Experiment`).
+    seed (which belongs to the :class:`Experiment`).  ``backend`` selects
+    the arbitration implementation (``"xla"`` inline jnp — the default —
+    or ``"pallas"``, the fused per-switch kernel); both are
+    bitwise-identical per replica, so it is a pure performance knob.
     """
 
     policy: str = "polarized"
@@ -97,6 +100,7 @@ class RouteSpec:
     endpoint_queue: int = 4
     pool: Optional[int] = None
     hist_bins: int = 4096
+    backend: str = "xla"
 
     def to_sim_config(self, seed: int = 0):
         from ..simulator.engine import SimConfig
@@ -106,7 +110,7 @@ class RouteSpec:
             out_queue=self.out_queue, speedup=self.speedup,
             endpoint_queue=self.endpoint_queue, max_hops=self.max_hops,
             deroute_penalty=self.deroute_penalty, pool=self.pool,
-            hist_bins=self.hist_bins, seed=seed,
+            hist_bins=self.hist_bins, seed=seed, backend=self.backend,
         )
 
     def to_dict(self) -> dict:

@@ -24,6 +24,7 @@ __all__ = [
     "bfs_distances",
     "RoutingTables",
     "build_tables",
+    "pack_port_masks",
     "polarized_port_mask",
     "route_packet_host",
     "POLICIES",
@@ -66,12 +67,24 @@ def bfs_distances(topo: Topology, sources: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class RoutingTables:
-    """Precomputed routing state shared by host router and simulator."""
+    """Precomputed routing state shared by host router and simulator.
+
+    ``dist_leaf`` stays int16 end to end (distances are tiny; the simulator
+    gathers these rows on every crossbar sub-round, so half-width halves the
+    memory traffic).  ``min_mask`` is the compact per-(target-leaf, switch)
+    minimal-port bitmask: bit ``p`` of word ``min_mask[t, c, p // 32]`` is
+    set iff port ``p`` of switch ``c`` leads one hop closer to leaf ``t``
+    (``nbrs[c, p] >= 0 and dist_leaf[t, nbrs[c, p]] == dist_leaf[t, c] - 1``).
+    Minimal policies (``minimal_adaptive``/``ksp``/``ugal``/``valiant``) test
+    these bits instead of gathering whole ``[P]`` distance rows per packet.
+    """
 
     topo: Topology
-    dist_leaf: np.ndarray          # [N1, N] distances from each leaf
+    dist_leaf: np.ndarray          # [N1, N] int16 distances from each leaf
     leaf_rank: np.ndarray          # [N] rank among leaves or -1
     dist_full: Optional[np.ndarray] = None   # [N, N] (small nets / direct nets)
+    min_mask: Optional[np.ndarray] = None    # [N1, N, W] uint32 toward-bits
+    away_mask: Optional[np.ndarray] = None   # [N1, N, W] uint32 away-bits
 
     @property
     def diameter_leaf(self) -> int:
@@ -92,10 +105,46 @@ class RoutingTables:
         return float(d.sum() / (n1 * (n1 - 1)))
 
 
+def pack_port_masks(dist_leaf: np.ndarray, nbrs: np.ndarray,
+                    leaf_chunk: int = 256):
+    """``(min_mask, away_mask)`` — [N1, N, ceil(P/32)] uint32 bitmasks.
+
+    Bit ``p`` of ``min_mask[t, c, p // 32]`` is set iff following port ``p``
+    from switch ``c`` decreases the distance to leaf ``t`` by exactly one;
+    ``away_mask`` is the increases-by-one twin.  Together they encode the
+    full Polarized link classification (Forward / Expansion / Contraction
+    are conjunctions of toward/away bits w.r.t. source and target, and the
+    neighbor distance is recoverable as ``d(c,t) + away - toward``), so the
+    simulator never gathers ``[P]``-wide distance rows.  Work is chunked
+    over target leaves so the [chunk, N, P] boolean intermediate stays
+    bounded on 100K-endpoint fabrics.
+    """
+    n1, n = dist_leaf.shape
+    p = nbrs.shape[1]
+    w = (p + 31) // 32
+    valid = nbrs >= 0
+    nbr_safe = np.where(valid, nbrs, 0)
+    min_mask = np.zeros((n1, n, w), np.uint32)
+    away_mask = np.zeros((n1, n, w), np.uint32)
+    for lo in range(0, n1, leaf_chunk):
+        d = dist_leaf[lo:lo + leaf_chunk]                     # [c, N]
+        dn = d[:, nbr_safe]                                   # [c, N, P]
+        toward = valid[None] & (dn == (d[:, :, None] - 1))
+        away = valid[None] & (dn == (d[:, :, None] + 1))
+        for j in range(p):
+            min_mask[lo:lo + leaf_chunk, :, j // 32] |= (
+                toward[:, :, j].astype(np.uint32) << np.uint32(j % 32))
+            away_mask[lo:lo + leaf_chunk, :, j // 32] |= (
+                away[:, :, j].astype(np.uint32) << np.uint32(j % 32))
+    return min_mask, away_mask
+
+
 def build_tables(topo: Topology, full: bool = False) -> RoutingTables:
     dist_leaf = bfs_distances(topo, topo.leaf_ids)
     dist_full = bfs_distances(topo, np.arange(topo.n_switches)) if full else None
-    return RoutingTables(topo, dist_leaf, topo.leaf_rank(), dist_full)
+    min_mask, away_mask = pack_port_masks(dist_leaf, topo.nbrs)
+    return RoutingTables(topo, dist_leaf, topo.leaf_rank(), dist_full,
+                         min_mask, away_mask)
 
 
 # ---------------------------------------------------------------------- #

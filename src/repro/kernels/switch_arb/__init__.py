@@ -1,0 +1,11 @@
+"""Fused per-switch crossbar arbitration kernel (simulator hot path)."""
+from .ops import switch_arbitrate_op, switch_arbitrate_flat, vc_prearb_op
+from .ref import switch_arbitrate_ref, vc_prearb_ref
+
+__all__ = [
+    "switch_arbitrate_op",
+    "switch_arbitrate_flat",
+    "switch_arbitrate_ref",
+    "vc_prearb_op",
+    "vc_prearb_ref",
+]

@@ -1,0 +1,87 @@
+"""Public ops: fused switch arbitration with kernel/oracle dispatch.
+
+``*_op`` entry points auto-fall back to interpret mode on CPU (kernel body
+executed in Python by the Pallas interpreter), matching the other kernel
+packages.  ``use_ref=True`` routes to the pure-jnp oracle instead — both
+paths are bitwise identical, so the engine's ``backend="pallas"`` output
+never depends on which one ran.
+
+``switch_arbitrate_flat`` adapts the engine's flat requester table
+(``[NR] = [N*P network inputs] ++ [S endpoint NICs]``) to the dense
+per-switch layout the kernel tiles over: ``row_of`` (static, topology-only)
+scatters flat rows to ``switch * r_max + row`` positions, and results
+gather back through the same map.  Dense rows not backed by a requester
+keep ``route = 0`` and can never win a grant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import switch_arbitrate, vc_prearb
+from .ref import switch_arbitrate_ref, vc_prearb_ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def vc_prearb_op(qlen, rand, *, block_n: int = 8,
+                 interpret: bool | None = None, use_ref: bool = False):
+    """VC pre-arbitration.  Returns ``(vc_sel int32 [N,P], has_pkt bool)``."""
+    if use_ref:
+        sel, has = vc_prearb_ref(qlen, rand)
+    else:
+        if interpret is None:
+            interpret = _auto_interpret()
+        sel, has = vc_prearb(qlen, rand, block_n=block_n,
+                             interpret=interpret)
+    return sel, has.astype(bool)
+
+
+def switch_arbitrate_op(occ, deroute, mask, tie, route, rnd, lo, *,
+                        penalty: float, block_n: int = 8,
+                        interpret: bool | None = None,
+                        use_ref: bool = False):
+    """Fused arbitration on the dense [N, R, P] layout (bool-friendly).
+
+    ``deroute``/``mask``/``route`` may be bool or int; ``win`` returns
+    bool.  Also returns ``seg`` int32 [N, P] — the winning priority word
+    per output port (-1 = no grant).
+    """
+    i32 = jnp.int32
+    args = (occ.astype(i32), deroute.astype(i32), mask.astype(i32), tie,
+            route.astype(i32), rnd.astype(i32), lo.astype(i32))
+    if use_ref:
+        port, win, seg = switch_arbitrate_ref(*args, penalty=penalty)
+    else:
+        if interpret is None:
+            interpret = _auto_interpret()
+        port, win, seg = switch_arbitrate(*args, penalty=penalty,
+                                          block_n=block_n,
+                                          interpret=interpret)
+    return port, win.astype(bool), seg
+
+
+def switch_arbitrate_flat(occ, deroute, mask, tie, route, rnd, lo, *,
+                          penalty: float, row_of, n_switches: int,
+                          r_max: int, **kw):
+    """Flat-requester adapter: ``[NR, ...]`` in, ``(port, win)`` back as
+    flat ``[NR]`` vectors plus ``seg`` flattened to ``[N * P]`` (matching
+    the engine's ``switch * P + port`` output-key layout).
+
+    ``row_of`` is the static flat-row -> dense-row map (int32 [NR],
+    injective, values < n_switches * r_max).
+    """
+    n_rows = n_switches * r_max
+
+    def den(x, fill):
+        out = jnp.full((n_rows,) + x.shape[1:], fill, x.dtype)
+        return out.at[row_of].set(x).reshape((n_switches, r_max)
+                                             + x.shape[1:])
+
+    port, win, seg = switch_arbitrate_op(
+        den(occ, 0), den(deroute, 0), den(mask, 0), den(tie, 0.0),
+        den(route, 0), den(rnd, 0), den(lo, 0), penalty=penalty, **kw)
+    return (port.reshape(-1)[row_of], win.reshape(-1)[row_of],
+            seg.reshape(-1))

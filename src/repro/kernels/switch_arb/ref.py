@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the fused switch-arbitration kernel.
+
+One crossbar sub-round of the cycle-level simulator
+(:mod:`repro.simulator.engine`) decomposes into
+
+1. **VC pre-arbitration** — per (switch, input port), pick one candidate VC
+   among the non-empty input queues by random priority;
+2. **routing-score evaluation** — per requester, score every output port
+   (occupancy + deroute penalty + random tiebreak, masked to the
+   allowed & credited ports) and pick the argmin;
+3. **segmented output arbitration** — per (switch, output port), grant the
+   single requester with the highest random priority.
+
+Stages 2+3 operate on a dense per-switch requester layout
+``[N, R, ...]`` where row ``r`` of switch ``n`` is network input port ``r``
+(``r < P``) or NIC slot ``r - P`` (leaf switches only); the engine scatters
+its flat requester table into this layout (see ``ops.switch_arbitrate_flat``)
+so a Pallas kernel can tile over switches with every requester of a switch
+resident in one block.
+
+All randomness is drawn by the caller and passed in — the oracle, the
+Pallas kernel, and the engine's inline XLA path therefore produce
+*bitwise identical* grants for the same PRNG stream.
+
+Integer-mask convention: ``deroute``/``mask``/``route`` arrive as int32
+0/1 (Pallas block I/O is friendlier to int32 than bool) and ``win`` is
+returned as int32 0/1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e9)
+
+
+def vc_prearb_ref(qlen, rand):
+    """VC pre-arbitration: random-priority pick among non-empty VCs.
+
+    ``qlen``: int32 [N, P, V] input-queue lengths; ``rand``: float32
+    [N, P, V] uniform [0, 1) priorities.  Returns ``(vc_sel, has_pkt)``:
+    int32 [N, P] selected VC and int32 [N, P] 0/1 whether any VC had a
+    packet (the selected VC is non-empty iff so).
+    """
+    prio = jnp.where(qlen > 0, rand, -1.0)
+    vc_sel = jnp.argmax(prio, axis=-1).astype(jnp.int32)
+    has_pkt = (jnp.max(prio, axis=-1) >= 0.0).astype(jnp.int32)
+    return vc_sel, has_pkt
+
+
+def switch_arbitrate_ref(occ, deroute, mask, tie, route, rnd, lo, *,
+                         penalty: float):
+    """Fused routing-score evaluation + segmented output arbitration.
+
+    Inputs (dense per-switch layout, ``R`` requester rows per switch):
+      occ     int32   [N, R, P]  congestion (output queue + downstream queue)
+      deroute int32   [N, R, P]  0/1 — port is a Polarized deroute
+      mask    int32   [N, R, P]  0/1 — port allowed by routing AND credited
+      tie     float32 [N, R, P]  uniform [0, 1) score tiebreak
+      route   int32   [N, R]     0/1 — requester holds a routable packet
+      rnd     int32   [N, R]     8-bit random arbitration priority
+      lo      int32   [N, R]     unique low bits (flat requester index)
+
+    Returns ``(port, win, seg)``: int32 [N, R] chosen output port, int32
+    [N, R] 0/1 grant mask (at most one winner per (switch, port)), and
+    int32 [N, P] winning priority word per output port (-1 = no grant; the
+    low 23 bits are the winner's unique ``lo`` — the engine inverts grants
+    through it without a scatter).
+    """
+    score = (occ.astype(jnp.float32)
+             + penalty * deroute.astype(jnp.float32) + tie)
+    score = jnp.where(mask > 0, score, BIG)
+    port = jnp.argmin(score, axis=-1).astype(jnp.int32)
+    can = (route > 0) & (jnp.min(score, axis=-1) < BIG)
+    # unique int32 priorities: 8 random high bits | unique requester index
+    prio = jnp.where(can, (rnd << 23) | lo, -1)
+    p_ids = jnp.arange(occ.shape[-1], dtype=jnp.int32)
+    onehot = (port[..., None] == p_ids) & can[..., None]        # [N,R,P]
+    seg = jnp.max(jnp.where(onehot, prio[..., None], -1), axis=1)  # [N,P]
+    seg_at = jnp.sum(jnp.where(onehot, seg[:, None, :], 0), axis=-1)
+    win = (can & (seg_at == prio)).astype(jnp.int32)
+    return port, win, seg

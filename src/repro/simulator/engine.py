@@ -1,8 +1,8 @@
 """Cycle-level interconnection-network simulator in JAX (CAMINOS-equivalent).
 
 Model (documented deviations from the paper's flit-level CAMINOS setup in
-DESIGN.md): slotted time — one slot = one 16-flit packet serialization on a
-link.  Input-queued switches with ``V`` virtual channels per port and
+docs/DESIGN.md): slotted time — one slot = one 16-flit packet serialization
+on a link.  Input-queued switches with ``V`` virtual channels per port and
 ``Q``-packet queues, credit-based flow control (a packet advances only if the
 downstream input queue for its next VC has room), separable random-priority
 output arbitration (one grant per output port per slot), per-input-port VC
@@ -10,17 +10,42 @@ pre-arbitration (one candidate VC per input port per slot), unbounded
 ejection, per-endpoint injection queues (one NIC per endpoint, one packet
 injected per slot max).
 
-Routing is evaluated *inside* the jitted step on precomputed leaf-distance
-tables:
+Routing is evaluated *inside* the jitted step on compact precomputed tables:
 
 * ``polarized``        — the paper's adapted Polarized routing (Section 4.3.2)
   with VC = updown-phase = hops // 2 (1 VC per Up-Down pass — the halved
-  deadlock resources of Section 4.3).
+  deadlock resources of Section 4.3).  Consumes two int16 distance rows
+  (to source and to target) per requester.
 * ``minimal_adaptive`` — adaptive minimal (Fat-Tree / OFT "MIN").
 * ``ksp``              — randomized minimal-DAG walk (models KSP's random
   choice among precomputed shortest paths).
 * ``ugal``             — UGAL-L with Valiant intermediate leaf (Dragonfly).
 * ``valiant``          — always-Valiant.
+
+The minimal policies never gather ``[P]``-wide distance rows: the candidate
+port set for (switch, target leaf) is static, so ``build_tables`` packs it
+into uint32 bitmasks (``RoutingTables.min_mask``) and the step does one
+word gather plus a bit test per requester.
+
+The step is engineered to be compute-bound, not gather/scatter-bound:
+
+* **O(S) packet free-list** — the pool allocator is a ring buffer
+  (``fl_buf``/``fl_head``/``fl_len``) with O(S) pops at inject and O(NR)
+  pushes at eject, replacing the per-slot ``jnp.nonzero`` scan over the
+  whole (up to 2M-entry) pool.  The free *set* is the ring window
+  (``Simulator.free_ids``); in-flight count is ``pool - fl_len``.
+  Per-packet attributes are bit-packed (``p_sd`` = src leaf << 16 | dst
+  leaf, ``p_bh`` = born slot << 8 | hops) to halve pool scatter/gather
+  traffic.
+* **Donated buffers** — ``run_chunk`` / ``run_chunk_batch`` /
+  ``_completion_loop`` donate the state pytree, so chunked runs update
+  state in place instead of double-buffering the whole simulator.  A state
+  dict passed to any of these is *consumed*: do not reuse it afterwards
+  (keep the returned dict instead).
+* **Pluggable arbitration backend** — ``SimConfig.backend`` selects
+  ``"xla"`` (default, inline jnp) or ``"pallas"`` (the fused per-switch
+  arbitration kernel in ``repro.kernels.switch_arb``, interpret-mode on
+  CPU).  Both backends are bitwise-identical per replica.
 
 Everything is fixed-shape; throughput/latency runs are jitted ``lax.scan``
 chunks, and completion runs are a single device-side ``lax.while_loop``
@@ -32,17 +57,34 @@ stacks R independently-seeded states along a leading replica dimension and
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.routing import RoutingTables, polarized_port_mask
+from ..core.routing import RoutingTables, pack_port_masks
 
 BIG = jnp.float32(1e9)
+
+BACKENDS = ("xla", "pallas")
+
+
+@contextlib.contextmanager
+def _quiet_cpu_donation():
+    """Buffer donation is a no-op on CPU backends; jax warns once per
+    compile, which would drown test output for the (CPU-only) tier-1
+    suite.  Scoped to this engine's own compiles — the process-global
+    filter is left alone so callers' unrelated donation diagnostics
+    still surface."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
 
 
 # ---------------------------------------------------------------------- #
@@ -61,6 +103,7 @@ class SimConfig:
     pool: Optional[int] = None   # packet pool size (default: auto)
     hist_bins: int = 4096        # latency histogram bins (slots)
     seed: int = 0
+    backend: str = "xla"         # "xla" | "pallas" arbitration backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +127,9 @@ class Traffic:
 
 class Simulator:
     def __init__(self, tables: RoutingTables, cfg: SimConfig):
+        if cfg.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {cfg.backend!r}; "
+                             f"expected one of {BACKENDS}")
         topo = tables.topo
         self.tables, self.cfg = tables, cfg
         self.N = topo.n_switches
@@ -102,9 +148,99 @@ class Simulator:
         self.valid_port = self.nbrs >= 0
         self.nbrs0 = jnp.maximum(self.nbrs, 0)
         assert (tables.dist_leaf >= 0).all(), "disconnected topology"
-        self.dist = jnp.asarray(tables.dist_leaf, jnp.int32)     # [N1,N]
+        # int16 distance table: the rows Polarized gathers per sub-round are
+        # half the width of the old int32 table; all consumers use the
+        # values in comparisons / tiny products, where int16 is exact.
+        self.dist = jnp.asarray(tables.dist_leaf, jnp.int16)     # [N1,N]
         self.leaf_ids = jnp.asarray(topo.leaf_ids, jnp.int32)    # [N1]
+        # compact port bitmasks [N1*N, W]: one uint32-word gather + bit
+        # test replaces a [P]-wide distance-row gather per requester
+        # (toward-bits drive the minimal policies; toward+away together
+        # encode the full Polarized classification).
+        min_mask, away_mask = tables.min_mask, tables.away_mask
+        if min_mask is None or away_mask is None:  # hand-built tables
+            min_mask, away_mask = pack_port_masks(tables.dist_leaf,
+                                                  topo.nbrs)
+        self.W = min_mask.shape[-1]
+        self.min_mask = jnp.asarray(min_mask.reshape(self.n1 * self.N,
+                                                     self.W))
+        # only Polarized reads the away bits; don't hold a second
+        # [N1*N, W] device table (100s of MB at paper scale) for the
+        # minimal policies
+        self.away_mask = (
+            jnp.asarray(away_mask.reshape(self.n1 * self.N, self.W))
+            if cfg.policy == "polarized" else None)
+        self._w_idx = jnp.asarray(np.arange(self.P) // 32, np.int32)
+        self._b_idx = jnp.asarray(np.arange(self.P) % 32, np.uint32)
+
+        # bit-packing bounds: p_sd packs two leaf ranks into 16 bits each,
+        # p_bh keeps hops in the low byte (born slot above it)
+        assert self.n1 < (1 << 16), "leaf rank overflows the p_sd packing"
+        assert cfg.max_hops < 255, "hop count overflows the p_bh packing"
+
+        self._init_requester_geometry(topo)
         self._closed = False
+
+    def _init_requester_geometry(self, topo) -> None:
+        """Static per-requester index tables for the crossbar hot path.
+
+        Requester rows are ``[N*P network inputs] ++ [S endpoint NICs]``.
+        Everything here depends only on the topology, so it is baked into
+        the compiled step as constants instead of being recomputed from
+        ``nbrs``/``nbr_port`` every sub-round.
+        """
+        N, P, V, S, d = self.N, self.P, self.V, self.S, self.d_leaf
+        nbrs = np.asarray(topo.nbrs)
+        nbr_port = np.asarray(topo.nbr_port)
+        leaf_ids = np.asarray(topo.leaf_ids)
+
+        cur_net = np.repeat(np.arange(N, dtype=np.int32), P)
+        cur_ep = leaf_ids[np.arange(S, dtype=np.int32) // d]
+        cur = np.concatenate([cur_net, cur_ep])                  # [NR]
+        self.NR = NR = cur.shape[0]
+        self.cur = jnp.asarray(cur)
+        ports = np.arange(P, dtype=np.int32)
+        # V-major occupancy layout: row (switch * V + vc) holds the [P]
+        # occupancy vector every requester of that switch with that flight
+        # VC needs, so the per-requester congestion lookup is a contiguous
+        # row gather indexed by cur * V + next_vc — no [NR, P] index
+        # matrices and no random-element gathers in the hot path.
+        self._dq_perm = jnp.asarray(
+            ((np.maximum(nbrs, 0) * P + np.maximum(nbr_port, 0))
+             [:, None, :] * V
+             + np.arange(V, dtype=np.int32)[None, :, None]
+             ).reshape(-1).astype(np.int32))                     # [N*V*P]
+        # UGAL source-switch occupancy (flat qlen index, VC 0)
+        if self.cfg.policy == "ugal":
+            sw = leaf_ids[np.arange(S, dtype=np.int32) // d]
+            self._ugal_occ_idx = jnp.asarray(
+                (np.maximum(nbrs, 0)[sw] * P + nbr_port[sw]) * V)  # [S,P]
+        # dense per-switch requester layout (pallas kernel + the scatter-free
+        # grant inversion).  Row r of switch n is net in-port r (r < P) or
+        # NIC slot r - P (leaf switches only); ``row_of`` maps flat
+        # requester index -> dense row.
+        self.R_max = P + d
+        net_rows = cur_net.astype(np.int64) * self.R_max + np.tile(
+            ports, N)
+        ep_rows = (cur_ep.astype(np.int64) * self.R_max + P
+                   + np.arange(S, dtype=np.int64) % d)
+        self._row_of = jnp.asarray(
+            np.concatenate([net_rows, ep_rows]).astype(np.int32))
+        self._lo = jnp.arange(NR, dtype=jnp.int32)
+        # static flat -> dense-row gather (the inverse of row_of, with a
+        # harmless duplicate fill for rows no requester occupies): lets the
+        # XLA backend run the same dense per-switch segmented reduction the
+        # Pallas kernel uses, without any scatter
+        inv = np.zeros(N * self.R_max, np.int64)
+        inv[np.concatenate([net_rows, ep_rows])] = np.arange(NR)
+        self._dense_src = jnp.asarray(inv.astype(np.int32))      # [N*R_max]
+        occupied = np.zeros(N * self.R_max, bool)
+        occupied[np.concatenate([net_rows, ep_rows])] = True
+        self._dense_valid = jnp.asarray(occupied.reshape(N, self.R_max))
+        # link reversal: the input port (n', p') is fed by exactly one
+        # output port — static, so receives invert sends with a gather
+        rev = (np.maximum(nbrs, 0) * P + np.maximum(nbr_port, 0))
+        self._rev_idx = jnp.asarray(rev.reshape(-1).astype(np.int32))
 
     # ------------------------------------------------------------------ #
     # lifetime: compiled step functions are jit-cached with ``self`` as a
@@ -149,11 +285,18 @@ class Simulator:
             "oq_head": Z(self.NQ), "oq_len": Z(self.NQ),
             "eq_buf": jnp.full((self.S, self.QE), -1, i32),
             "eq_head": Z(self.S), "eq_len": Z(self.S),
-            # packet pool
-            "p_free": jnp.ones(self.pool, bool),
-            "p_src": Z(self.pool), "p_dst": Z(self.pool),
-            "p_dst_sw": Z(self.pool), "p_mid": jnp.full(self.pool, -1, i32),
-            "p_born": Z(self.pool), "p_hops": Z(self.pool),
+            # packet pool + ring-buffer free-list (all pool slots free);
+            # pops at inject are O(S), pushes at eject O(NR) — no per-slot
+            # nonzero scan over the pool.  There is no free bitmap in the
+            # hot path: free = the fl_buf ring window (see free_ids()).
+            # Per-packet attributes are bit-packed to halve the pool
+            # scatters/gathers: p_sd = src_leaf << 16 | dst_leaf,
+            # p_bh = born_slot << 8 | hops.
+            "fl_buf": jnp.arange(self.pool, dtype=i32),
+            "fl_head": Z(), "fl_len": jnp.asarray(self.pool, i32),
+            "p_sd": Z(self.pool),
+            "p_mid": jnp.full(self.pool, -1, i32),
+            "p_bh": Z(self.pool),
             # endpoint message program
             "msg_rem": Z(self.S), "msg_dst": Z(self.S), "prog": Z(self.S),
             # stats
@@ -165,6 +308,14 @@ class Simulator:
         }
         st.update({k: jnp.asarray(v) for k, v in seed_arrays.items()})
         return st
+
+    # ------------------------------------------------------------------ #
+    def _port_bits(self, table, t_lr, cur):
+        """[len(t_lr), P] bool port mask from a packed table: one
+        uint32-word gather per requester instead of a [P] distance row.
+        Invalid ports are already zero in the packed words."""
+        words = table[t_lr * self.N + cur]                       # [.,W]
+        return ((words[:, self._w_idx] >> self._b_idx) & 1).astype(bool)
 
     # ------------------------------------------------------------------ #
     def _inject(self, st, key, traffic: Traffic):
@@ -217,16 +368,14 @@ class Simulator:
         deliver_local = want & local
         want_net = want & ~local
 
+        # O(S) free-list pop: requester with rank r takes the r-th entry of
+        # the ring buffer; requesters past the free count get the -1
+        # sentinel (pool_stall) rather than an aliased packet id.
         rank = jnp.cumsum(want_net.astype(jnp.int32)) - 1
-        free_idx = jnp.nonzero(st["p_free"], size=min(S, self.pool),
-                               fill_value=-1)[0].astype(jnp.int32)
-        # overflow requesters (rank beyond the free list) get the -1 sentinel
-        # rather than the clipped last entry — clipping aliased two endpoints
-        # onto one packet id and corrupted the pool when cfg.pool < S.
-        in_free = rank < free_idx.shape[0]
-        pid = jnp.where(want_net & in_free,
-                        free_idx[jnp.clip(rank, 0, free_idx.shape[0] - 1)], -1)
-        ok = want_net & (pid >= 0)
+        ok = want_net & (rank < st["fl_len"])
+        slot_idx = (st["fl_head"] + jnp.maximum(rank, 0)) % self.pool
+        pid = jnp.where(ok, st["fl_buf"][slot_idx], -1)
+        n_pop = ok.sum(dtype=jnp.int32)
 
         # UGAL/Valiant: sample intermediate leaf & (UGAL) compare queue depths
         mid = jnp.full((S,), -1, jnp.int32)
@@ -234,13 +383,9 @@ class Simulator:
             mid_lr = jax.random.randint(k4, (S,), 0, self.n1)
             if self.cfg.policy == "ugal":
                 sw = self.leaf_ids[src_lr]
-                nb = self.nbrs0[sw]                                   # [S,P]
-                occ0 = st["qlen"].reshape(self.N, self.P, self.V)[nb, self.nbr_port[sw], 0]
-                vp = self.valid_port[sw]
+                occ0 = st["qlen"][self._ugal_occ_idx]             # [S,P]
                 def best(t_lr):
-                    d_n = self.dist[t_lr[:, None], nb]
-                    d_c = self.dist[t_lr, sw]
-                    m = vp & (d_n == d_c[:, None] - 1)
+                    m = self._port_bits(self.min_mask, t_lr, sw)
                     return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
                 q_min = best(dst_lr)
                 q_val = best(mid_lr)
@@ -254,17 +399,19 @@ class Simulator:
         # sentinel index == pool size -> dropped writes for non-injectors
         widx = jnp.where(ok, jnp.maximum(pid, 0), self.pool)
         st = dict(st)
-        st["p_free"] = st["p_free"].at[widx].set(False, mode="drop")
-        st["p_src"] = st["p_src"].at[widx].set(src_lr, mode="drop")
-        st["p_dst"] = st["p_dst"].at[widx].set(dst_lr, mode="drop")
-        st["p_dst_sw"] = st["p_dst_sw"].at[widx].set(self.leaf_ids[dst_lr], mode="drop")
-        st["p_mid"] = st["p_mid"].at[widx].set(mid, mode="drop")
-        st["p_born"] = st["p_born"].at[widx].set(st["slot"], mode="drop")
-        st["p_hops"] = st["p_hops"].at[widx].set(0, mode="drop")
-        # push into NIC queue (e is unique per row -> no collisions)
+        st["fl_head"] = (st["fl_head"] + n_pop) % self.pool
+        st["fl_len"] = st["fl_len"] - n_pop
+        st["p_sd"] = st["p_sd"].at[widx].set((src_lr << 16) | dst_lr,
+                                             mode="drop")
+        if self.cfg.policy in ("ugal", "valiant"):
+            st["p_mid"] = st["p_mid"].at[widx].set(mid, mode="drop")
+        st["p_bh"] = st["p_bh"].at[widx].set(st["slot"] << 8, mode="drop")
+        # push into NIC queue (dense one-hot write — one row per endpoint)
         pos = (st["eq_head"] + st["eq_len"]) % self.QE
-        st["eq_buf"] = st["eq_buf"].at[e, jnp.where(ok, pos, self.QE)].set(
-            jnp.maximum(pid, 0), mode="drop")
+        slot_hot = ok[:, None] & (jnp.arange(self.QE, dtype=jnp.int32)[None, :]
+                                  == pos[:, None])
+        st["eq_buf"] = jnp.where(slot_hot, jnp.maximum(pid, 0)[:, None],
+                                 st["eq_buf"])
         st["eq_len"] = st["eq_len"] + ok.astype(jnp.int32)
 
         consumed = ok | deliver_local
@@ -290,13 +437,19 @@ class Simulator:
         N, P, V, Q, S = self.N, self.P, self.V, self.Q, self.S
         OQ = self.cfg.out_queue
         k_vc, k_tie, k_arb = jax.random.split(key, 3)
+        pallas = self.cfg.backend == "pallas"
 
         qlen3 = st["qlen"].reshape(N, P, V)
         # ---- VC pre-arbitration: one candidate VC per (switch, in-port) ----
-        vc_prio = jax.random.uniform(k_vc, (N, P, V))
-        vc_prio = jnp.where(qlen3 > 0, vc_prio, -1.0)
-        vc_sel = jnp.argmax(vc_prio, axis=2)                       # [N,P]
-        has_pkt = jnp.take_along_axis(qlen3, vc_sel[:, :, None], 2)[:, :, 0] > 0
+        vc_rand = jax.random.uniform(k_vc, (N, P, V))
+        if pallas:
+            from ..kernels.switch_arb.ops import vc_prearb_op
+            vc_sel, has_pkt = vc_prearb_op(qlen3, vc_rand)
+        else:
+            vc_prio = jnp.where(qlen3 > 0, vc_rand, -1.0)
+            vc_sel = jnp.argmax(vc_prio, axis=2)                 # [N,P]
+            # the selected VC holds a packet iff any VC does
+            has_pkt = jnp.max(vc_prio, axis=2) >= 0.0
 
         q_idx = (jnp.arange(N * P, dtype=jnp.int32).reshape(N, P) * V
                  + vc_sel.astype(jnp.int32)).reshape(-1)           # [N*P]
@@ -308,108 +461,158 @@ class Simulator:
             jnp.arange(S, dtype=jnp.int32) * self.QE + st["eq_head"]]
         ep_pkt = jnp.where((st["eq_len"] > 0) & ep_active, ep_head, -1)
 
-        # ---- unified requester table ----
-        cur_net = jnp.repeat(jnp.arange(N, dtype=jnp.int32), P)
-        cur_ep = self.leaf_ids[jnp.arange(S, dtype=jnp.int32) // self.d_leaf]
-        cur = jnp.concatenate([cur_net, cur_ep])                    # [NR]
+        # ---- unified requester table (static geometry from __init__) ----
+        cur = self.cur                                             # [NR]
         pkt = jnp.concatenate([net_pkt, ep_pkt])
-        NR = cur.shape[0]
+        NR = self.NR
         valid = pkt >= 0
         pkt0 = jnp.maximum(pkt, 0)
 
-        s_lr, t_lr = st["p_src"][pkt0], st["p_dst"][pkt0]
-        hops = st["p_hops"][pkt0]
-        dst_sw = st["p_dst_sw"][pkt0]
-        mid_lr = st["p_mid"][pkt0]
-
-        eject = valid & (cur == dst_sw)
+        bh = st["p_bh"][pkt0]
+        hops = bh & 0xFF
+        sd = st["p_sd"][pkt0]
+        t_lr = sd & 0xFFFF
+        # destination switch is a pure function of the destination leaf:
+        # a cache-resident [N1] gather, not another pool-wide attribute
+        eject = valid & (cur == self.leaf_ids[t_lr])
         route = valid & ~eject
-
-        nb = self.nbrs0[cur]                                        # [NR,P]
-        vp = self.valid_port[cur]
-        dflat = self.dist.reshape(-1)
-        d_ct = dflat[t_lr * N + cur]
-        d_nt = dflat[(t_lr * N)[:, None] + nb]
-
         pol = self.cfg.policy
         if pol == "polarized":
+            # full Polarized classification from toward/away bits alone:
+            # Forward = away-from-s & toward-t, Expansion = away & away
+            # (while d_cs < d_ct), Contraction = toward & toward (once
+            # d_cs >= d_ct); d(n,t) for the hop budget is d(c,t)+away-toward
+            s_lr = sd >> 16
+            dn_t = self._port_bits(self.min_mask, t_lr, cur)
+            up_t = self._port_bits(self.away_mask, t_lr, cur)
+            dn_s = self._port_bits(self.min_mask, s_lr, cur)
+            up_s = self._port_bits(self.away_mask, s_lr, cur)
+            dflat = self.dist.reshape(-1)
+            d_ct = dflat[t_lr * N + cur]
             d_cs = dflat[s_lr * N + cur]
-            d_ns = dflat[(s_lr * N)[:, None] + nb]
-            allowed, deroute = polarized_port_mask(
-                d_cs[:, None], d_ct[:, None], d_ns, d_nt,
-                hops[:, None], self.cfg.max_hops, vp)
+            src_side = (d_cs < d_ct)[:, None]
+            deroute = (up_s & up_t & src_side) | (dn_s & dn_t & ~src_side)
+            d_nt = (d_ct[:, None] + up_t.astype(jnp.int16)
+                    - dn_t.astype(jnp.int16))
+            budget_ok = (hops[:, None] + 1 + d_nt) <= self.cfg.max_hops
+            allowed = (up_s & dn_t) | (deroute & budget_ok)
             next_vc = jnp.minimum(hops // 2, V - 1)
         elif pol in ("minimal_adaptive", "ksp"):
-            allowed = vp & (d_nt == d_ct[:, None] - 1)
+            allowed = self._port_bits(self.min_mask, t_lr, cur)
             deroute = jnp.zeros_like(allowed)
             next_vc = jnp.minimum(hops // 2, V - 1)
         elif pol in ("ugal", "valiant"):
+            mid_lr = st["p_mid"][pkt0]
             tgt = jnp.where(mid_lr >= 0, mid_lr, t_lr)
-            d_cg = dflat[tgt * N + cur]
-            d_ng = dflat[(tgt * N)[:, None] + nb]
-            allowed = vp & (d_ng == d_cg[:, None] - 1)
+            allowed = self._port_bits(self.min_mask, tgt, cur)
             deroute = jnp.zeros_like(allowed)
             next_vc = jnp.minimum(hops, V - 1)
         else:
             raise ValueError(pol)
 
         # congestion signal: local output queue + downstream input queue for
-        # the flight VC.  Credit = room in the local output queue.
-        oq_idx = (cur[:, None] * P + jnp.arange(P, dtype=jnp.int32)[None, :]
-                  ) * V + next_vc[:, None]                          # [NR,P]
-        dq_idx = (nb * P + self.nbr_port[cur]) * V + next_vc[:, None]
-        occ = st["oq_len"][oq_idx] + st["qlen"][dq_idx]
-        credit = st["oq_len"][oq_idx] < OQ
-        score = (occ.astype(jnp.float32)
-                 + self.cfg.deroute_penalty * deroute
-                 + jax.random.uniform(k_tie, (NR, P)))
-        if pol == "ksp":
-            score = jax.random.uniform(k_tie, (NR, P))
-        score = jnp.where(allowed & credit, score, BIG)
-        port = jnp.argmin(score, axis=1).astype(jnp.int32)
-        can_move = route & (jnp.min(score, axis=1) < BIG)
-
-        # ---- output arbitration: one grant per (switch, out-port, round) ----
-        out_key = cur * P + port                                    # [NR]
-        # unique int32 priorities: 8 random high bits | requester index
+        # the flight VC.  Credit = room in the local output queue.  Both
+        # lookups are contiguous row gathers from the V-major layout
+        # (row = switch * V + flight VC), built once per round.
+        oq_v = st["oq_len"].reshape(N, P, V).transpose(0, 2, 1) \
+            .reshape(N * V, P)
+        qd_v = st["qlen"][self._dq_perm].reshape(N * V, P)
+        occ_row = cur * V + next_vc                                # [NR]
+        oq_occ = oq_v[occ_row]                                     # [NR,P]
+        occ = oq_occ + qd_v[occ_row]
+        credit = oq_occ < OQ
+        tie = jax.random.uniform(k_tie, (NR, P))
         rnd = jax.random.randint(k_arb, (NR,), 0, 1 << 8, dtype=jnp.int32)
-        prio = (rnd << 23) | jnp.arange(NR, dtype=jnp.int32)
-        prio = jnp.where(can_move, prio, -1)
-        seg = jnp.full((N * P,), -1, jnp.int32).at[out_key].max(prio)
-        win = can_move & (seg[out_key] == prio)
+        mask = allowed & credit
+        if pol == "ksp":        # random walk: score is the tiebreak alone
+            occ = jnp.zeros_like(occ)
+            deroute = jnp.zeros_like(deroute)
+        if pallas:
+            # fused score-evaluation + segmented output arbitration kernel
+            from ..kernels.switch_arb.ops import switch_arbitrate_flat
+            port, win, seg = switch_arbitrate_flat(
+                occ, deroute, mask, tie, route, rnd, self._lo,
+                penalty=float(self.cfg.deroute_penalty),
+                row_of=self._row_of, n_switches=N, r_max=self.R_max)
+        else:
+            score = (occ.astype(jnp.float32)
+                     + self.cfg.deroute_penalty * deroute + tie)
+            score = jnp.where(mask, score, BIG)
+            port = jnp.argmin(score, axis=1).astype(jnp.int32)
+            can_move = route & (jnp.min(score, axis=1) < BIG)
+
+            # ---- output arbitration: one grant per (switch, out-port) ----
+            out_key = cur * P + port                               # [NR]
+            # unique int32 priorities: 8 random high bits | requester index
+            prio = (rnd << 23) | self._lo
+            prio = jnp.where(can_move, prio, -1)
+            # dense per-switch segmented max — the same scatter-free
+            # reduction the Pallas kernel runs (static row gathers; rows
+            # with no requester carry priority -1)
+            prio_d = jnp.where(self._dense_valid,
+                               prio[self._dense_src].reshape(N, self.R_max),
+                               -1)
+            port_d = port[self._dense_src].reshape(N, self.R_max)
+            hot = ((port_d[:, :, None]
+                    == jnp.arange(P, dtype=jnp.int32))
+                   & (prio_d >= 0)[:, :, None])                    # [N,R,P]
+            seg = jnp.max(jnp.where(hot, prio_d[:, :, None], -1),
+                          axis=1).reshape(-1)                      # [N*P]
+            win = can_move & (seg[out_key] == prio)
 
         # ---- moves: input queue -> output queue ----
-        tgt_q = oq_idx[jnp.arange(NR), port]
-        tgt_pos = tgt_q * OQ + (st["oq_head"][tgt_q] + st["oq_len"][tgt_q]) % OQ
-        oq_buf = st["oq_buf"].reshape(-1)
-        oq_buf = oq_buf.at[jnp.where(win, tgt_pos, oq_buf.shape[0])].set(
-            pkt0, mode="drop")
-        oq_len = st["oq_len"].at[jnp.where(win, tgt_q, self.NQ)].add(1, mode="drop")
+        # XLA CPU scatters serialize element by element, so the queue
+        # updates are phrased as gathers + dense one-hot selects instead:
+        # the winning priority word per output port *is* the inverted grant
+        # (its low 23 bits are the unique flat requester index).
+        exist = seg >= 0                                           # [N*P]
+        wlo = jnp.where(exist, seg & ((1 << 23) - 1), 0)
+        win_pkt = pkt0[wlo]                                        # [N*P]
+        win_vc = next_vc[wlo]
+        v_ids = jnp.arange(V, dtype=jnp.int32)
+        push = (exist[:, None] & (win_vc[:, None] == v_ids)).reshape(-1)
+        pos = (st["oq_head"] + st["oq_len"]) % OQ                  # [NQ]
+        slot_hot = push[:, None] & (jnp.arange(OQ, dtype=jnp.int32)[None, :]
+                                    == pos[:, None])
+        win_pkt_q = jnp.broadcast_to(win_pkt[:, None],
+                                     (N * P, V)).reshape(-1)       # [NQ]
+        oq_buf = jnp.where(slot_hot, win_pkt_q[:, None], st["oq_buf"])
+        oq_len = st["oq_len"] + push.astype(jnp.int32)
 
-        # pops: winners + ejectors leave their input queues
+        # pops: winners + ejectors leave their input queues (each
+        # (switch, in-port) pops at most its one pre-arbitrated VC — dense)
         leave = win | eject
         net_leave = leave[: N * P]
-        qi = jnp.where(net_leave, q_idx, self.NQ)
-        qhead = st["qhead"].at[qi].add(1, mode="drop") % Q
-        qlen = st["qlen"].at[qi].add(-1, mode="drop")
+        pop = (net_leave[:, None]
+               & (vc_sel.reshape(-1).astype(jnp.int32)[:, None] == v_ids)
+               ).reshape(-1).astype(jnp.int32)                     # [NQ]
+        qhead = (st["qhead"] + pop) % Q
+        qlen = st["qlen"] - pop
         ep_leave = leave[N * P:]
         eq_head = (st["eq_head"] + ep_leave.astype(jnp.int32)) % self.QE
         eq_len = st["eq_len"] - ep_leave.astype(jnp.int32)
 
-        # ejections: free pool, record stats
-        p_free = st["p_free"].at[jnp.where(eject, pkt0, self.pool)].set(
-            True, mode="drop")
-        lat = jnp.clip(st["slot"] - st["p_born"][pkt0] + 1, 0,
+        # ejections: free pool (O(N*P) free-list push), record stats.  Only
+        # network input ports can eject (same-leaf traffic never enters the
+        # network), so the pool scatters index the net rows alone.
+        ej_n = eject[: N * P]
+        pkt_n = pkt0[: N * P]
+        erank = jnp.cumsum(ej_n.astype(jnp.int32)) - 1
+        fpos = (st["fl_head"] + st["fl_len"] + jnp.maximum(erank, 0)) % self.pool
+        fl_buf = st["fl_buf"].at[jnp.where(ej_n, fpos, self.pool)].set(
+            pkt_n, mode="drop")
+        fl_len = st["fl_len"] + ej_n.sum(dtype=jnp.int32)
+        lat = jnp.clip(st["slot"] - (bh[: N * P] >> 8) + 1, 0,
                        self.cfg.hist_bins - 1)
-        lat_hist = st["lat_hist"].at[jnp.where(eject, lat, 0)].add(
-            jnp.where(eject, 1, 0))
+        lat_hist = st["lat_hist"].at[jnp.where(ej_n, lat, 0)].add(
+            jnp.where(ej_n, 1, 0))
 
         st = dict(st)
         st["oq_buf"] = oq_buf.reshape(self.NQ, OQ)
         st["oq_len"] = oq_len
         st["qhead"], st["qlen"] = qhead, qlen
         st["eq_head"], st["eq_len"] = eq_head, eq_len
-        st["p_free"] = p_free
+        st["fl_buf"], st["fl_len"] = fl_buf, fl_len
         st["lat_hist"] = lat_hist
         st["ejected"] = st["ejected"] + eject.sum(dtype=jnp.int32)
         st["hop_sum"] = st["hop_sum"] + jnp.where(eject, hops, 0).sum(dtype=jnp.int32)
@@ -441,27 +644,47 @@ class Simulator:
         src_q = np_idx * V + vcs
         pkt = st["oq_buf"].reshape(-1)[src_q * OQ + st["oq_head"][src_q]]
         pkt0 = jnp.maximum(pkt, 0)
-        tgt_q = dq[np_idx, vcs]
-        tgt_pos = tgt_q * Q + (st["qhead"][tgt_q] + st["qlen"][tgt_q]) % Q
 
-        qbuf = st["qbuf"].reshape(-1)
-        qbuf = qbuf.at[jnp.where(send, tgt_pos, qbuf.shape[0])].set(pkt0, mode="drop")
-        qlen = st["qlen"].at[jnp.where(send, tgt_q, self.NQ)].add(1, mode="drop")
-        sq = jnp.where(send, src_q, self.NQ)
-        oq_head = st["oq_head"].at[sq].add(1, mode="drop") % OQ
-        oq_len = st["oq_len"].at[sq].add(-1, mode="drop")
-        p_hops = st["p_hops"].at[jnp.where(send, pkt0, self.pool)].add(1, mode="drop")
-        # clear UGAL/Valiant intermediate when the packet reaches it
-        mid_lr = st["p_mid"][pkt0]
-        reached_mid = send & (mid_lr >= 0) & (nb == self.leaf_ids[jnp.maximum(mid_lr, 0)])
-        p_mid = st["p_mid"].at[jnp.where(reached_mid, pkt0, self.pool)].set(
-            -1, mode="drop")
+        # scatter-free queue updates: each (switch, port) pops at most one
+        # VC (dense one-hot), and each *input* port receives from exactly
+        # one static upstream output port, so receives are a gather through
+        # the link-reversal map instead of a scatter through ``dq``.
+        v_ids = jnp.arange(V, dtype=jnp.int32)
+        pop = (send[:, None] & (vcs[:, None] == v_ids)
+               ).reshape(-1).astype(jnp.int32)                      # [NQ]
+        oq_head = (st["oq_head"] + pop) % OQ
+        oq_len = st["oq_len"] - pop
+        recv = send[self._rev_idx] & self.valid_port.reshape(-1)    # [N*P]
+        recv_vc = vcs[self._rev_idx]
+        recv_pkt = pkt0[self._rev_idx]
+        push = (recv[:, None] & (recv_vc[:, None] == v_ids)).reshape(-1)
+        qpos = (st["qhead"] + st["qlen"]) % Q                       # [NQ]
+        slot_hot = push[:, None] & (jnp.arange(Q, dtype=jnp.int32)[None, :]
+                                    == qpos[:, None])
+        recv_pkt_q = jnp.broadcast_to(recv_pkt[:, None],
+                                      (N * P, V)).reshape(-1)
+        qbuf = jnp.where(slot_hot, recv_pkt_q[:, None], st["qbuf"])
+        qlen = st["qlen"] + push.astype(jnp.int32)
+
+        # hop increment on the packed born|hops word (hops are the low byte)
+        p_bh = st["p_bh"].at[jnp.where(send, pkt0, self.pool)].add(
+            1, mode="drop")
+        # clear UGAL/Valiant intermediate when the packet reaches it (the
+        # other policies never set p_mid, so they skip the bookkeeping)
+        if self.cfg.policy in ("ugal", "valiant"):
+            mid_lr = st["p_mid"][pkt0]
+            reached_mid = send & (mid_lr >= 0) & (
+                nb == self.leaf_ids[jnp.maximum(mid_lr, 0)])
+            p_mid = st["p_mid"].at[jnp.where(reached_mid, pkt0, self.pool)
+                                   ].set(-1, mode="drop")
+        else:
+            p_mid = st["p_mid"]
 
         st = dict(st)
-        st["qbuf"] = qbuf.reshape(self.NQ, Q)
+        st["qbuf"] = qbuf
         st["qlen"] = qlen
         st["oq_head"], st["oq_len"] = oq_head, oq_len
-        st["p_hops"], st["p_mid"] = p_hops, p_mid
+        st["p_bh"], st["p_mid"] = p_bh, p_mid
         return st
 
     def _step(self, st, traffic: Traffic):
@@ -477,23 +700,38 @@ class Simulator:
         return st
 
     # ------------------------------------------------------------------ #
-    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
-    def run_chunk(self, st, traffic: Traffic, n_slots: int):
+    # ``donate_argnums=(1,)``: the state pytree is updated in place by the
+    # runtime instead of double-buffering every array per chunk.  The input
+    # dict is CONSUMED — callers must keep using the returned state.
+    # ------------------------------------------------------------------ #
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
+    def _run_chunk_jit(self, st, traffic: Traffic, n_slots: int):
         def body(carry, _):
             return self._step(carry, traffic), None
         st, _ = jax.lax.scan(body, st, None, length=n_slots)
         return st
 
-    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
-    def run_chunk_batch(self, st, traffic: Traffic, n_slots: int):
-        """``run_chunk`` vmapped over a leading ``[R]`` replica axis."""
+    def run_chunk(self, st, traffic: Traffic, n_slots: int):
+        """Advance ``n_slots`` slots.  ``st`` is donated (consumed)."""
+        with _quiet_cpu_donation():
+            return self._run_chunk_jit(st, traffic, n_slots)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
+    def _run_chunk_batch_jit(self, st, traffic: Traffic, n_slots: int):
         def one(s):
             def body(carry, _):
                 return self._step(carry, traffic), None
             return jax.lax.scan(body, s, None, length=n_slots)[0]
         return jax.vmap(one)(st)
 
-    @functools.partial(jax.jit, static_argnums=(0, 2, 4, 5))
+    def run_chunk_batch(self, st, traffic: Traffic, n_slots: int):
+        """``run_chunk`` vmapped over a leading ``[R]`` replica axis.
+        ``st`` is donated (consumed)."""
+        with _quiet_cpu_donation():
+            return self._run_chunk_batch_jit(st, traffic, n_slots)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 4, 5),
+                       donate_argnums=(1,))
     def _completion_loop(self, st, traffic: Traffic, expected,
                          chunk: int, max_slots: int):
         """Device-side completion detection: a ``lax.while_loop`` over
@@ -546,7 +784,11 @@ class Simulator:
             seed_arrays["partner"] = np.zeros(self.S, np.int32)  # set by caller
         st = self.init_state(traffic, seed_arrays)
         if seed:  # thread the run seed into the sim PRNG (seed=0: legacy key)
-            st["key"] = jax.random.PRNGKey(self.cfg.seed + (seed << 16))
+            # fold_in, not key arithmetic: PRNGKey(cfg.seed + (seed << 16))
+            # collides distinct (cfg.seed, seed) pairs, e.g. (65536, 0) with
+            # (0, 1)
+            st["key"] = jax.random.fold_in(
+                jax.random.PRNGKey(self.cfg.seed), seed)
         return st
 
     def make_batch_state(self, traffic: Traffic, seeds) -> dict:
@@ -560,22 +802,37 @@ class Simulator:
         states = [self.make_state(traffic, seed=int(s)) for s in seeds]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
+    @staticmethod
+    def free_ids(st) -> np.ndarray:
+        """Host-side view of the free packet ids (the fl_buf ring window)
+        of a scalar state.  ``pool - fl_len`` packets are in flight."""
+        buf = np.asarray(st["fl_buf"])
+        head, n = int(st["fl_head"]), int(st["fl_len"])
+        return buf[(head + np.arange(n)) % buf.shape[0]]
+
+    @staticmethod
+    def _counter_snapshot(st) -> dict:
+        # fresh device buffers (`x + 0`), not views: the source state is
+        # about to be donated to the measurement chunk
+        return {k: st[k] + 0 for k in ("ejected", "hop_sum", "pool_stall")}
+
     def run_throughput(self, traffic: Traffic, warm: int = 200,
                        measure: int = 400, seed: int = 0) -> dict:
         st = self.make_state(traffic, seed)
         st = self.run_chunk(st, traffic, warm)
-        e0, h0, ps0 = (int(st["ejected"]), int(st["hop_sum"]),
-                       int(st["pool_stall"]))
+        base = self._counter_snapshot(st)
         st = self.run_chunk(st, traffic, measure)
-        e1, h1, ps1 = (int(st["ejected"]), int(st["hop_sum"]),
-                       int(st["pool_stall"]))
+        # warm/measure deltas computed on device, fetched in ONE transfer
+        # (the old path issued three blocking int() syncs per phase)
+        m = jax.device_get({k: st[k] - base[k] for k in base}
+                           | {"ejected_total": st["ejected"]})
         return {
-            "throughput": (e1 - e0) / (self.S * measure),
-            # steady-state window only: the cumulative h1/e1 ratio used to
-            # fold warmup transients into the reported hop count
-            "avg_hops": (h1 - h0) / max(e1 - e0, 1),
-            "ejected": e1,
-            "pool_stall": ps1 - ps0,
+            "throughput": int(m["ejected"]) / (self.S * measure),
+            # steady-state window only: the cumulative ratio used to fold
+            # warmup transients into the reported hop count
+            "avg_hops": int(m["hop_sum"]) / max(int(m["ejected"]), 1),
+            "ejected": int(m["ejected_total"]),
+            "pool_stall": int(m["pool_stall"]),
             "state": st,
         }
 
@@ -587,18 +844,16 @@ class Simulator:
         """
         st = self.make_batch_state(traffic, seeds)
         st = self.run_chunk_batch(st, traffic, warm)
-        e0 = np.asarray(st["ejected"])
-        h0 = np.asarray(st["hop_sum"])
-        ps0 = np.asarray(st["pool_stall"])
+        base = self._counter_snapshot(st)
         st = self.run_chunk_batch(st, traffic, measure)
-        e1 = np.asarray(st["ejected"])
-        h1 = np.asarray(st["hop_sum"])
-        ps1 = np.asarray(st["pool_stall"])
+        m = jax.device_get({k: st[k] - base[k] for k in base}
+                           | {"ejected_total": st["ejected"]})
+        e, h = np.asarray(m["ejected"]), np.asarray(m["hop_sum"])
         return {
-            "throughput": (e1 - e0) / (self.S * measure),
-            "avg_hops": (h1 - h0) / np.maximum(e1 - e0, 1),
-            "ejected": e1,
-            "pool_stall": ps1 - ps0,
+            "throughput": e / (self.S * measure),
+            "avg_hops": h / np.maximum(e, 1),
+            "ejected": np.asarray(m["ejected_total"]),
+            "pool_stall": np.asarray(m["pool_stall"]),
             "state": st,
         }
 
@@ -606,10 +861,9 @@ class Simulator:
                     measure: int = 600, seed: int = 0) -> dict:
         st = self.make_state(traffic, seed)
         st = self.run_chunk(st, traffic, warm)
-        h0 = np.asarray(st["lat_hist"])
+        base = st["lat_hist"] + 0            # fresh buffer; st is donated
         st = self.run_chunk(st, traffic, measure)
-        h1 = np.asarray(st["lat_hist"])
-        hist = h1 - h0
+        hist = np.asarray(jax.device_get(st["lat_hist"] - base))
         return {"hist": hist, **percentiles(hist, (0.5, 0.99, 0.9999))}
 
     def run_latency_batch(self, traffic: Traffic, seeds,
@@ -619,10 +873,9 @@ class Simulator:
         nothing in the window)."""
         st = self.make_batch_state(traffic, seeds)
         st = self.run_chunk_batch(st, traffic, warm)
-        h0 = np.asarray(st["lat_hist"])
+        base = st["lat_hist"] + 0
         st = self.run_chunk_batch(st, traffic, measure)
-        h1 = np.asarray(st["lat_hist"])
-        hist = h1 - h0                                           # [R, bins]
+        hist = np.asarray(jax.device_get(st["lat_hist"] - base))  # [R, bins]
         per = [percentiles(row, (0.5, 0.99, 0.9999)) for row in hist]
         out = {"hist": hist}
         for k in ("p0.5", "p0.99", "p0.9999"):
@@ -640,11 +893,19 @@ class Simulator:
         batched (``make_batch_state``) state; with a replica axis, ``slots``
         / ``completed`` / ``pool_stall`` come back as per-replica arrays and
         the loop stops once *all* replicas have completed.
+
+        A caller-provided ``state`` is consumed (its buffers are donated to
+        the device loop) — reuse the returned ``state`` instead.
         """
         st = state if state is not None else self.make_state(traffic, seed)
+        # p_bh packs the born slot above the hop byte; past 2^23 slots the
+        # shifted value would wrap int32 and corrupt latency measurement
+        assert max_slots < (1 << 23), \
+            "max_slots overflows the p_bh born-slot packing (< 2^23)"
         st = {k: jnp.asarray(v) for k, v in st.items()}
-        st, done = self._completion_loop(st, traffic, expected, chunk,
-                                         max_slots)
+        with _quiet_cpu_donation():
+            st, done = self._completion_loop(st, traffic, expected, chunk,
+                                             max_slots)
         done = np.asarray(done)
         final = np.asarray(st["slot"])
         slots = np.where(done >= 0, done, final)
@@ -666,12 +927,17 @@ class Simulator:
 
 def percentiles(hist: np.ndarray, qs) -> dict:
     """Latency percentiles from a histogram whose bin index *is* the latency
-    in slots (packets are recorded at ``clip(slot - born + 1, ...)``)."""
+    in slots (packets are recorded at ``clip(slot - born + 1, ...)``).
+
+    Uniformly ``float`` valued: completed bins return ``float(bin)`` and
+    empty histograms ``float("nan")`` — downstream aggregation never sees a
+    mixed int/float stream.
+    """
     total = hist.sum()
     out = {}
     if total == 0:
         return {f"p{q}": float("nan") for q in qs}
     cum = np.cumsum(hist)
     for q in qs:
-        out[f"p{q}"] = int(np.searchsorted(cum, q * total))
+        out[f"p{q}"] = float(np.searchsorted(cum, q * total))
     return out

@@ -76,6 +76,37 @@ def test_experiment_json_roundtrip_lossless():
     assert Experiment.from_dict(d) == exp
 
 
+def test_latency_result_uniformly_float_json_roundtrip():
+    # Result.latency values are uniformly float (None for empty windows) —
+    # never a mix of int and float — and survive a JSON round trip intact
+    exp = Experiment(network=TINY, route=ROUTE, metric="latency",
+                     warm=10, measure=20)
+    res = Result(experiment=exp, metric="latency",
+                 latency={"p50": 12.0, "p99": 30.0, "p9999": None})
+    again = Result.from_json(res.to_json())
+    assert again == res
+    assert all(v is None or type(v) is float
+               for v in again.latency.values())
+
+
+def test_latency_run_emits_floats():
+    exp = Experiment(network=TINY, route=ROUTE, metric="latency",
+                     workload=WorkloadSpec("uniform", load=0.5),
+                     warm=30, measure=60)
+    res = run(exp)
+    assert res.latency is not None
+    assert all(v is None or type(v) is float for v in res.latency.values())
+    again = Result.from_json(res.to_json())
+    assert again.latency == res.latency
+
+
+def test_route_spec_backend_round_trips_and_reaches_sim_config():
+    r = RouteSpec(policy="polarized", backend="pallas")
+    assert RouteSpec.from_dict(r.to_dict()) == r
+    assert r.to_sim_config().backend == "pallas"
+    assert RouteSpec().to_sim_config().backend == "xla"
+
+
 def test_network_spec_param_order_insensitive():
     a = NetworkSpec("mrls", {"u": 3, "n_leaves": 14, "d": 3})
     b = NetworkSpec("mrls", {"d": 3, "u": 3, "n_leaves": 14})

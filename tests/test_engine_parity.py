@@ -1,0 +1,77 @@
+"""Bitwise parity gates for the device-resident step overhaul.
+
+Two independent locks:
+
+* **Golden parity** — the compact-table + free-list + donated-buffer engine
+  (``backend="xla"``) must reproduce the committed pre-overhaul outputs
+  (``tests/golden/engine_parity.json``, captured from the seed engine)
+  *bitwise* for every routing policy on the tiny MRLS fabric: throughput,
+  steady-state avg hops, ejected count, pool stalls, and the full latency
+  histogram.
+* **Backend parity** — ``backend="pallas"`` (fused arbitration kernel,
+  interpret mode on CPU) must produce the *identical state pytree* as
+  ``backend="xla"`` after a chunked run, for every policy.
+
+Both engines share one PRNG stream by construction, so any divergence is
+a real behaviour change, not noise.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import mrls, build_tables
+from repro.simulator.engine import Simulator, SimConfig, Traffic
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "engine_parity.json")
+    .read_text())
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return build_tables(mrls(**GOLDEN["fabric"]))
+
+
+@pytest.mark.parametrize("policy", sorted(GOLDEN["policies"]))
+def test_golden_parity_bitwise(tables, policy):
+    gp = GOLDEN["policies"][policy]
+    warm, measure = GOLDEN["warm"], GOLDEN["measure"]
+    with Simulator(tables, SimConfig(policy=policy, max_hops=10,
+                                     pool=4096)) as sim:
+        thr = sim.run_throughput(Traffic("uniform", load=0.7),
+                                 warm=warm, measure=measure, seed=0)
+        lat = sim.run_latency(Traffic("uniform", load=0.5),
+                              warm=warm, measure=measure, seed=0)
+    assert thr["throughput"] == gp["throughput"]        # bitwise, no approx
+    assert thr["avg_hops"] == gp["avg_hops"]
+    assert thr["ejected"] == gp["ejected"]
+    assert thr["pool_stall"] == gp["pool_stall"]
+    hist = np.asarray(lat["hist"])
+    golden_hist = np.zeros_like(hist)
+    for bin_, count in gp["lat_hist_nonzero"].items():
+        golden_hist[int(bin_)] = count
+    np.testing.assert_array_equal(hist, golden_hist)
+
+
+@pytest.mark.parametrize("policy", sorted(GOLDEN["policies"]))
+def test_pallas_backend_matches_xla_bitwise(tables, policy):
+    import jax
+    tr = Traffic("uniform", load=0.7)
+    states = {}
+    for backend in ("xla", "pallas"):
+        with Simulator(tables, SimConfig(policy=policy, max_hops=10,
+                                         pool=4096, backend=backend)) as sim:
+            st = sim.make_state(tr, seed=0)
+            st = sim.run_chunk(st, tr, 24)
+            states[backend] = jax.device_get(st)
+    for key in states["xla"]:
+        np.testing.assert_array_equal(
+            states["xla"][key], states["pallas"][key],
+            err_msg=f"state[{key!r}] diverges between backends")
+
+
+def test_unknown_backend_rejected(tables):
+    with pytest.raises(ValueError, match="backend"):
+        Simulator(tables, SimConfig(backend="cuda"))

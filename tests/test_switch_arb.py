@@ -1,0 +1,108 @@
+"""switch_arb Pallas kernel vs pure-jnp oracle: interpret-mode equality on
+random inputs (exact — the kernel is integer/float-deterministic), plus the
+flat-requester adapter round trip."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.switch_arb.kernel import switch_arbitrate, vc_prearb
+from repro.kernels.switch_arb.ops import (switch_arbitrate_flat,
+                                          switch_arbitrate_op, vc_prearb_op)
+from repro.kernels.switch_arb.ref import switch_arbitrate_ref, vc_prearb_ref
+
+
+def _random_case(rng, n, r, p):
+    occ = jnp.asarray(rng.integers(0, 12, (n, r, p)), jnp.int32)
+    deroute = jnp.asarray(rng.integers(0, 2, (n, r, p)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (n, r, p)), jnp.int32)
+    tie = jnp.asarray(rng.random((n, r, p)), jnp.float32)
+    route = jnp.asarray(rng.integers(0, 2, (n, r)), jnp.int32)
+    rnd = jnp.asarray(rng.integers(0, 256, (n, r)), jnp.int32)
+    lo = jnp.arange(n * r, dtype=jnp.int32).reshape(n, r)
+    return occ, deroute, mask, tie, route, rnd, lo
+
+
+@pytest.mark.parametrize("n,r,p,block_n", [
+    (8, 18, 12, 8),
+    (5, 9, 7, 2),        # ragged: N % block_n != 0, odd R/P -> padding path
+    (16, 8, 128, 8),     # lane-aligned already
+    (3, 33, 40, 4),
+])
+def test_arbitrate_kernel_matches_ref_exactly(n, r, p, block_n):
+    rng = np.random.default_rng(n * 1000 + r)
+    args = _random_case(rng, n, r, p)
+    ref_port, ref_win, ref_seg = switch_arbitrate_ref(*args, penalty=8.0)
+    k_port, k_win, k_seg = switch_arbitrate(*args, penalty=8.0,
+                                            block_n=block_n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(k_port), np.asarray(ref_port))
+    np.testing.assert_array_equal(np.asarray(k_win), np.asarray(ref_win))
+    np.testing.assert_array_equal(np.asarray(k_seg), np.asarray(ref_seg))
+
+
+def test_arbitrate_grants_unique_per_output_port():
+    rng = np.random.default_rng(7)
+    args = _random_case(rng, 6, 20, 10)
+    port, win, seg = switch_arbitrate_ref(*args, penalty=8.0)
+    port, win = np.asarray(port), np.asarray(win).astype(bool)
+    for n in range(6):
+        granted = port[n][win[n]]
+        assert len(granted) == len(set(granted.tolist())), \
+            "two grants on one output port"
+    # seg is -1 exactly on ports with no grant
+    seg = np.asarray(seg)
+    for n in range(6):
+        assert set(np.nonzero(seg[n] >= 0)[0]) == set(port[n][win[n]])
+
+
+@pytest.mark.parametrize("n,p,v", [(8, 12, 4), (5, 7, 3), (9, 16, 8)])
+def test_vc_prearb_kernel_matches_ref_exactly(n, p, v):
+    rng = np.random.default_rng(n)
+    qlen = jnp.asarray(rng.integers(0, 3, (n, p, v)), jnp.int32)
+    rand = jnp.asarray(rng.random((n, p, v)), jnp.float32)
+    ref_sel, ref_has = vc_prearb_ref(qlen, rand)
+    k_sel, k_has = vc_prearb(qlen, rand, block_n=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(k_sel), np.asarray(ref_sel))
+    np.testing.assert_array_equal(np.asarray(k_has), np.asarray(ref_has))
+
+
+def test_ops_dispatch_ref_and_kernel_agree():
+    rng = np.random.default_rng(3)
+    args = _random_case(rng, 4, 10, 6)
+    for use_ref in (True, False):
+        port, win, seg = switch_arbitrate_op(*args, penalty=4.0,
+                                             use_ref=use_ref, interpret=True)
+        assert win.dtype == bool
+    sel, has = vc_prearb_op(jnp.asarray(rng.integers(0, 2, (4, 6, 4)),
+                                        jnp.int32),
+                            jnp.asarray(rng.random((4, 6, 4)), jnp.float32),
+                            use_ref=True)
+    assert has.dtype == bool
+
+
+def test_flat_adapter_round_trips_the_dense_layout():
+    # 3 switches, r_max 4, 2 "endpoint" rows left unoccupied on switch 2
+    rng = np.random.default_rng(11)
+    n, r_max, p = 3, 4, 5
+    row_of = jnp.asarray(np.array([0, 1, 2, 4, 5, 6, 8, 9, 3, 7],
+                                  np.int32))      # injective, < n * r_max
+    nr = int(row_of.shape[0])
+    occ = jnp.asarray(rng.integers(0, 5, (nr, p)), jnp.int32)
+    deroute = jnp.zeros((nr, p), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (nr, p)), jnp.int32)
+    tie = jnp.asarray(rng.random((nr, p)), jnp.float32)
+    route = jnp.ones((nr,), jnp.int32)
+    rnd = jnp.asarray(rng.integers(0, 256, (nr,)), jnp.int32)
+    lo = jnp.arange(nr, dtype=jnp.int32)
+    port, win, seg = switch_arbitrate_flat(
+        occ, deroute, mask, tie, route, rnd, lo, penalty=8.0,
+        row_of=row_of, n_switches=n, r_max=r_max, use_ref=True)
+    assert port.shape == (nr,) and win.shape == (nr,)
+    assert seg.shape == (n * p,)
+    # winners' lo bits recover the flat requester index through seg
+    seg = np.asarray(seg)
+    win = np.asarray(win)
+    port = np.asarray(port)
+    for i in np.nonzero(win)[0]:
+        # reconstruct this winner's switch from the dense row map
+        sw = int(row_of[i]) // r_max
+        assert seg[sw * p + int(port[i])] & ((1 << 23) - 1) == i
