@@ -1,0 +1,169 @@
+"""Collective-execution speedup demo (ISSUE 4 acceptance criterion).
+
+Before/after wall clock of a replicas=8 Rabenseifner allreduce on the
+1008-endpoint MRLS fabric.  Same method as ``bench_replicas.py`` /
+``bench_step.py``: each variant runs in its own subprocess so every
+timing is a clean cold-start wall clock.
+
+* ``before`` — the pre-program host phase loop, emulated faithfully: one
+  fresh batched ``Traffic("phase")`` state per Rabenseifner phase (host
+  state build + transfer), one ``run_completion`` device loop per phase
+  (a distinct compile per distinct ``phase_packets`` value), and a full
+  host sync between phases.
+* ``after``  — the device-resident program executor: the whole R-replica,
+  P-phase schedule compiles once and runs as **one** ``lax.while_loop``
+  with the phase counter, ejection targets, and exact per-phase
+  completion slots on device (``Simulator.run_program``).
+
+Both paths are bitwise-identical per phase (locked by
+``tests/test_engine_parity.py``), so the comparison is pure execution
+overhead.  Emits ``name,us_total,derived`` rows plus a machine-readable
+``BENCH_collective.json`` (``--out``).  ``--check BASELINE.json`` exits
+non-zero if the before/after speedup regresses more than 20% below the
+committed baseline for the same fabric (the ratio compares two
+measurements from one machine, so the gate is insensitive to CI host
+speed).  Acceptance: after >= 1.5x before on the 1008-endpoint MRLS.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+FABRICS = {
+    # name -> (mrls builder kwargs, ranks, vec_packets)
+    "tiny": ({"n_leaves": 14, "u": 3, "d": 3, "seed": 0}, 16, 8),
+    "mrls1008": ({"n_leaves": 168, "u": 6, "d": 6, "seed": 1}, 512, 16),
+}
+REPLICAS = 8
+CHUNK, MAX_SLOTS = 16, 20_000
+REGRESSION_TOLERANCE = 0.20
+
+
+def _sim(fabric: str):
+    from repro.core import build_tables, mrls
+    from repro.simulator.engine import Simulator, SimConfig
+    params, ranks, vec = FABRICS[fabric]
+    tables = build_tables(mrls(**params))
+    return Simulator(tables, SimConfig(policy="polarized", max_hops=8)), \
+        ranks, vec
+
+
+def phase_before(fabric: str, replicas: int) -> dict:
+    """Pre-program host loop, batched: per phase — fresh batch state,
+    hand-patched partner table, one device completion loop, host sync."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.collectives import rabenseifner_phases
+    from repro.simulator.engine import Traffic
+    sim, ranks, vec = _sim(fabric)
+    seeds = list(range(1, replicas + 1))
+    total = np.zeros(replicas, np.int64)
+    stall = np.zeros(replicas, np.int64)
+    ok = np.ones(replicas, bool)
+    for ph in rabenseifner_phases(ranks, vec):
+        tr = Traffic("phase", phase_packets=ph["packets"])
+        partner = np.arange(sim.S, dtype=np.int32)
+        partner[:ranks] = ph["partner"]
+        bst = sim.make_batch_state(tr, seeds)
+        bst["partner"] = jnp.broadcast_to(jnp.asarray(partner),
+                                          (replicas, sim.S))
+        r = sim.run_completion(tr, expected=sim.S * ph["packets"],
+                               chunk=CHUNK, max_slots=MAX_SLOTS, state=bst)
+        ok &= np.asarray(r["completed"])
+        total += np.asarray(r["slots"])
+        stall += np.asarray(r["pool_stall"])
+    assert ok.all()
+    return {"slots": [int(x) for x in total]}
+
+
+def phase_after(fabric: str, replicas: int) -> dict:
+    """One compiled program run: all replicas, all phases, zero per-phase
+    host round-trips."""
+    from repro.workloads import compile_program, rabenseifner_program
+    sim, ranks, vec = _sim(fabric)
+    cp = compile_program(rabenseifner_program(sim.S, ranks, vec))
+    r = sim.run_program(cp, chunk=CHUNK, max_slots=MAX_SLOTS,
+                        seeds=list(range(1, replicas + 1)))
+    assert bool(r["completed"].all())
+    return {"slots": [int(x) for x in r["slots"]]}
+
+
+PHASES = {"before": phase_before, "after": phase_after}
+
+
+def _child(phase: str, fabric: str, replicas: int):
+    t0 = time.perf_counter()
+    out = PHASES[phase](fabric, replicas)
+    print(json.dumps({"t": time.perf_counter() - t0, **out}))
+
+
+def _spawn(phase: str, fabric: str, replicas: int) -> dict:
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()),
+         "--phase", phase, "--fabric", fabric,
+         "--replicas", str(replicas)],
+        check=True, capture_output=True, text=True, cwd=str(_ROOT))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(fabric: str, replicas: int, out_path, check_path):
+    from benchmarks.common import emit
+    before = _spawn("before", fabric, replicas)
+    after = _spawn("after", fabric, replicas)
+    # the program path is the host loop, bitwise — any slot drift means
+    # the benchmark is comparing different computations
+    assert before["slots"] == after["slots"], (before, after)
+    speedup = before["t"] / after["t"]
+    record = {"replicas": replicas,
+              "before_host_loop_s": before["t"],
+              "after_program_s": after["t"],
+              "speedup": speedup,
+              "slots": after["slots"]}
+    emit(f"bench_collective.{fabric}.before_host_loop", before["t"] * 1e6,
+         f"slots={before['slots'][0]}")
+    emit(f"bench_collective.{fabric}.after_program", after["t"] * 1e6,
+         f"slots={after['slots'][0]}")
+    emit(f"bench_collective.{fabric}.speedup", 0.0, f"{speedup:.2f}x")
+
+    if out_path:
+        doc = {}
+        p = pathlib.Path(out_path)
+        if p.exists():
+            doc = json.loads(p.read_text())
+        doc[fabric] = record
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {p}")
+
+    if check_path:
+        base = json.loads(pathlib.Path(check_path).read_text()).get(fabric)
+        if base is None:
+            print(f"no committed baseline for fabric {fabric!r}; skipping "
+                  "regression check")
+        else:
+            ref = base["speedup"]
+            floor = (1 - REGRESSION_TOLERANCE) * ref
+            status = "OK" if speedup >= floor else "REGRESSION"
+            print(f"regression check [{status}]: speedup={speedup:.2f}x "
+                  f"vs committed {ref:.2f}x (floor {floor:.2f}x)")
+            if speedup < floor:
+                sys.exit(1)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+
+    def _opt(flag, default):
+        return argv[argv.index(flag) + 1] if flag in argv else default
+    _fabric = _opt("--fabric", "mrls1008")
+    _replicas = int(_opt("--replicas", str(REPLICAS)))
+    _phase = _opt("--phase", None)
+    if _phase:
+        _child(_phase, _fabric, _replicas)
+    else:
+        main(_fabric, _replicas, _opt("--out", None), _opt("--check", None))

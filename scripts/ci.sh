@@ -17,10 +17,24 @@ mkdir -p artifacts
 python -m repro.api run examples/specs/tiny_mrls_a2a.json \
     --replicas 2 --out artifacts/batched_smoke_result.json
 
+echo "== smoke: workload programs (adversarial + collective schedules) =="
+# tornado/hotspot/bursty Bernoulli families, ring allreduce, and windowed
+# all2all/allreduce, all through the declarative CLI
+python -m repro.api run examples/specs/tiny_workloads.json \
+    --out artifacts/workloads_smoke_result.json
+
 echo "== bench: step-loop slots/sec on the tiny fabric =="
 # emits artifacts/BENCH_step.json and fails if the post-overhaul engine
 # regresses >20% against the committed benchmarks/BENCH_step.json baseline
 python benchmarks/bench_step.py --fabric tiny \
     --out artifacts/BENCH_step.json --check benchmarks/BENCH_step.json
+
+echo "== bench: collective host-loop vs device-resident program =="
+# emits artifacts/BENCH_collective.json and fails if the program
+# executor's speedup over the emulated host phase loop regresses >20%
+# against the committed benchmarks/BENCH_collective.json baseline
+python benchmarks/bench_collective.py --fabric tiny \
+    --out artifacts/BENCH_collective.json \
+    --check benchmarks/BENCH_collective.json
 
 echo "CI OK"

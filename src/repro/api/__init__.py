@@ -22,7 +22,8 @@ from .specs import (
     NetworkSpec, RouteSpec, WorkloadSpec, Experiment,
     BERNOULLI_PATTERNS, COLLECTIVE_PATTERNS,
 )
-from .registry import register_topology, topology_families, build_network
+from .registry import (register_topology, topology_families, build_network,
+                       workload_patterns)
 from .runner import (Result, SimulatorCache, open_simulator, routing_tables,
                      run, run_all)
 from .sweep import expand_axes, sweep
@@ -31,6 +32,7 @@ __all__ = [
     "NetworkSpec", "RouteSpec", "WorkloadSpec", "Experiment",
     "BERNOULLI_PATTERNS", "COLLECTIVE_PATTERNS",
     "register_topology", "topology_families", "build_network",
+    "workload_patterns",
     "Result", "SimulatorCache", "open_simulator", "routing_tables", "run",
     "run_all",
     "expand_axes", "sweep",

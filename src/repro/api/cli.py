@@ -11,6 +11,8 @@ Commands:
   holds ``{"base": <experiment>, "axes": {"workload.load": [...], ...}}``;
   a seed-only axis is folded into one batched run per remaining grid point.
 * ``families`` — list registered topology families.
+* ``patterns`` — list the workload-pattern registry (Bernoulli families,
+  collectives, and which collectives compile to device-resident programs).
 
 Each result prints as a one-line human summary on stderr-free stdout plus,
 with ``--out``, the full JSON records.
@@ -23,7 +25,7 @@ import sys
 from typing import List, Optional
 
 from .runner import Result, run_all
-from .registry import topology_families
+from .registry import topology_families, workload_patterns
 from .specs import Experiment
 from .sweep import sweep
 
@@ -91,6 +93,14 @@ def _cmd_families(_args) -> int:
     return 0
 
 
+def _cmd_patterns(_args) -> int:
+    for name, kind in workload_patterns():
+        print(f"{name}  [{kind}]")
+    print("(* = compiles to a device-resident workload program; "
+          "supports schedule=barrier|window)")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     parser = argparse.ArgumentParser(prog="python -m repro.api",
                                      description=__doc__.splitlines()[0])
@@ -113,6 +123,10 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     p_fam = sub.add_parser("families", help="list topology families")
     p_fam.set_defaults(fn=_cmd_families)
+
+    p_pat = sub.add_parser("patterns",
+                           help="list workload patterns (shared registry)")
+    p_pat.set_defaults(fn=_cmd_patterns)
 
     args = parser.parse_args(argv)
     return args.fn(args)

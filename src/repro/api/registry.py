@@ -1,8 +1,12 @@
-"""String-keyed topology-builder registry.
+"""String-keyed registries behind the declarative layer.
 
-Seeds from :data:`repro.core.TOPOLOGY_BUILDERS` (the six paper families)
-and accepts user registrations, so downstream code can declare fabrics by
-name in JSON without importing builder functions.
+* Topology builders: seeds from :data:`repro.core.TOPOLOGY_BUILDERS` (the
+  six paper families) and accepts user registrations, so downstream code
+  can declare fabrics by name in JSON without importing builder functions.
+* Workload patterns: re-exported views of the shared pattern registry
+  (:mod:`repro.workloads.patterns`) that ``WorkloadSpec`` and the engine
+  both validate against, plus the collective -> program builder table
+  (:data:`repro.workloads.programs.PROGRAM_BUILDERS`).
 """
 from __future__ import annotations
 
@@ -10,9 +14,26 @@ from typing import Callable, Optional
 
 from ..core import TOPOLOGY_BUILDERS
 from ..core.topology import Topology
+from ..workloads.patterns import pattern_kinds
+from ..workloads.programs import PROGRAM_BUILDERS
 from .specs import NetworkSpec
 
-__all__ = ["register_topology", "topology_families", "build_network"]
+__all__ = ["register_topology", "topology_families", "build_network",
+           "workload_patterns"]
+
+
+def workload_patterns() -> tuple:
+    """``(name, kind)`` pairs for every spec-level workload pattern, sorted
+    by name.  Collectives marked ``collective*`` compile to device-resident
+    workload programs."""
+    out = []
+    for name, kind in sorted(pattern_kinds().items()):
+        if kind == "engine":
+            continue                       # not reachable from WorkloadSpec
+        if kind == "collective" and name in PROGRAM_BUILDERS:
+            kind = "collective*"
+        out.append((name, kind))
+    return tuple(out)
 
 _REGISTRY: dict = dict(TOPOLOGY_BUILDERS)
 

@@ -4,8 +4,11 @@ Owns the four-stage pipeline every driver used to hand-wire —
 topology builder -> ``build_tables`` -> ``Simulator(SimConfig)`` ->
 ``Traffic`` — plus simulator lifetime (context-managed; teardown clears
 the jit caches that otherwise accumulate one executable per instance)
-and collective orchestration (Rabenseifner allreduce runs its phase
-schedule internally instead of callers patching ``st["partner"]``).
+and collective orchestration: collectives compile to device-resident
+workload programs (:mod:`repro.workloads`) and run as **one** device
+computation per experiment — the old per-phase host loop (fresh
+``Traffic("phase")`` state + ``run_completion`` per Rabenseifner phase)
+is gone, with bitwise-identical ``phase_slots``.
 """
 from __future__ import annotations
 
@@ -15,12 +18,11 @@ import json
 from typing import Mapping, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import build_tables
-from ..core.collectives import rabenseifner_phases
 from ..simulator.engine import Simulator, Traffic
+from ..workloads import build_collective_program, compile_program
 from .registry import build_network
 from .specs import Experiment, NetworkSpec, RouteSpec
 
@@ -204,40 +206,51 @@ def _to_traffic(exp: Experiment) -> Traffic:
     w = exp.workload
     return Traffic(pattern=w.pattern, load=w.load, rounds=w.rounds,
                    elephant_frac=w.elephant_frac,
-                   elephant_size=w.elephant_size)
+                   elephant_size=w.elephant_size,
+                   shift=w.shift, hot_frac=w.hot_frac,
+                   hot_count=w.hot_count, burst_len=w.burst_len,
+                   burst_load=w.burst_load)
 
 
-def _allreduce_ranks(sim: Simulator, exp: Experiment) -> int:
-    n = exp.workload.ranks or 1 << (sim.S.bit_length() - 1)
-    if n > sim.S:
-        raise ValueError(f"allreduce ranks {n} > endpoints {sim.S}")
-    return n
+def _is_program(exp: Experiment) -> bool:
+    """Collectives with a program builder execute device-resident.
+    ``all2all`` only joins when a schedule is requested (its default is
+    the legacy free-running engine pattern); everything else in
+    ``PROGRAM_BUILDERS`` — built-in or registered via
+    ``register_program_builder`` — always compiles."""
+    from ..workloads.programs import PROGRAM_BUILDERS
+    w = exp.workload
+    if w.pattern == "all2all":
+        return bool(w.schedule)
+    return w.pattern in PROGRAM_BUILDERS
 
 
-def _run_allreduce(sim: Simulator, exp: Experiment) -> Result:
-    n = _allreduce_ranks(sim, exp)
-    total, ok, stall, per_phase = 0, True, 0, []
-    for ph in rabenseifner_phases(n, exp.workload.vec_packets):
-        tr = Traffic("phase", phase_packets=ph["packets"])
-        st = sim.make_state(tr, seed=exp.seed)
-        partner = np.arange(sim.S, dtype=np.int32)
-        partner[:n] = ph["partner"]
-        st["partner"] = np.asarray(partner)
-        # every endpoint starts one ``packets``-size message (self-partnered
-        # ones deliver locally and still count in ``ejected``), so the
-        # completion target is all S*packets deliveries — counting only the
-        # inter-rank messages would let the local fast path cross the
-        # threshold while rank traffic is still in flight
-        expected = sim.S * ph["packets"]
-        r = sim.run_completion(tr, expected=expected, chunk=exp.chunk,
-                               max_slots=exp.max_slots, state=st)
-        ok &= r["completed"]
-        total += r["slots"]
-        stall += r["pool_stall"]
-        per_phase.append(int(r["slots"]))
-    return Result(experiment=exp, metric="completion", slots=total,
-                  completed=ok, pool_stall=stall,
-                  phase_slots=tuple(per_phase))
+def _collective_program(sim: Simulator, exp: Experiment):
+    """Build + compile the workload program for a collective experiment.
+
+    The allreduce family defaults to the parity-locked ``barrier``
+    schedule (bitwise the old host loop); a scheduled ``all2all``
+    compiles its shifted-exchange rounds under the requested mode.
+    """
+    w = exp.workload
+    prog = build_collective_program(
+        w.pattern, sim.S, rounds=w.rounds, ranks=w.ranks,
+        vec_packets=w.vec_packets)
+    return compile_program(prog, schedule=w.schedule or "barrier",
+                           window=w.window)
+
+
+def _run_collective(sim: Simulator, exp: Experiment) -> Result:
+    """One device-resident program run replaces the old per-phase host
+    loop (fresh ``Traffic("phase")`` state + ``run_completion`` per
+    Rabenseifner phase) — same ``phase_slots``, zero host round-trips."""
+    cp = _collective_program(sim, exp)
+    r = sim.run_program(cp, chunk=exp.chunk, max_slots=exp.max_slots,
+                        seed=exp.seed)
+    return Result(experiment=exp, metric="completion",
+                  slots=int(r["slots"]), completed=bool(r["completed"]),
+                  pool_stall=int(r["pool_stall"]),
+                  phase_slots=tuple(int(s) for s in r["phase_slots"]))
 
 
 # ---------------------------------------------------------------------- #
@@ -255,37 +268,21 @@ def _batched_metrics(sim: Simulator, exp: Experiment, seeds) -> Tuple[str, dict]
     w = exp.workload
     seeds = [int(s) for s in seeds]
 
-    if w.pattern == "allreduce":
+    if _is_program(exp):
         if metric != "completion":
-            raise ValueError("allreduce only supports the completion metric")
-        n = _allreduce_ranks(sim, exp)
-        R = len(seeds)
-        total = np.zeros(R, np.int64)
-        ok = np.ones(R, bool)
-        stall = np.zeros(R, np.int64)
-        phases = []
-        for ph in rabenseifner_phases(n, w.vec_packets):
-            tr = Traffic("phase", phase_packets=ph["packets"])
-            partner = np.arange(sim.S, dtype=np.int32)
-            partner[:n] = ph["partner"]
-            bst = sim.make_batch_state(tr, seeds)
-            bst["partner"] = jnp.broadcast_to(jnp.asarray(partner),
-                                              (len(seeds), sim.S))
-            # all S*packets deliveries, as in the scalar path above
-            expected = sim.S * ph["packets"]
-            r = sim.run_completion(tr, expected=expected, chunk=exp.chunk,
-                                   max_slots=exp.max_slots, state=bst)
-            ok &= np.asarray(r["completed"])
-            total += np.asarray(r["slots"])
-            stall += np.asarray(r["pool_stall"])
-            phases.append(np.asarray(r["slots"]))
-        per_phase = np.stack(phases, axis=1)                     # [R, phases]
+            raise ValueError(f"{w.pattern} only supports the completion "
+                             "metric")
+        # one device computation for all R replicas x P phases: the phase
+        # counters and per-phase completion slots live on device
+        cp = _collective_program(sim, exp)
+        r = sim.run_program(cp, chunk=exp.chunk, max_slots=exp.max_slots,
+                            seeds=seeds)
         return metric, {
-            "slots": tuple(int(x) for x in total),
-            "completed": tuple(bool(x) for x in ok),
-            "pool_stall": tuple(int(x) for x in stall),
+            "slots": tuple(int(x) for x in r["slots"]),
+            "completed": tuple(bool(x) for x in r["completed"]),
+            "pool_stall": tuple(int(x) for x in r["pool_stall"]),
             "phase_slots": tuple(tuple(int(v) for v in row)
-                                 for row in per_phase),
+                                 for row in r["phase_slots"]),
         }
 
     traffic = _to_traffic(exp)
@@ -464,10 +461,11 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
         seeds = exp.replica_seeds()
         metric, per = _batched_metrics(sim, exp, seeds)
         return _batched_result(exp, seeds, metric, per)
-    if exp.workload.pattern == "allreduce":
+    if _is_program(exp):
         if metric != "completion":
-            raise ValueError("allreduce only supports the completion metric")
-        return _run_allreduce(sim, exp)
+            raise ValueError(f"{exp.workload.pattern} only supports the "
+                             "completion metric")
+        return _run_collective(sim, exp)
 
     traffic = _to_traffic(exp)
     if metric == "throughput":

@@ -18,6 +18,12 @@ import dataclasses
 import json
 from typing import Any, Mapping, Optional, Tuple
 
+# the single pattern-name registry, shared with the engine's ``Traffic``
+# (repro.workloads.patterns) — a typo'd pattern raises the same error in
+# both layers
+from ..workloads.patterns import (BERNOULLI_PATTERNS, COLLECTIVE_PATTERNS,
+                                  check_pattern, check_schedule)
+
 __all__ = [
     "NetworkSpec",
     "RouteSpec",
@@ -26,11 +32,6 @@ __all__ = [
     "BERNOULLI_PATTERNS",
     "COLLECTIVE_PATTERNS",
 ]
-
-# patterns drawn fresh each slot (open-loop Bernoulli injection)
-BERNOULLI_PATTERNS = ("uniform", "rep", "rsp", "bu", "mice_elephant")
-# finite programs measured to completion
-COLLECTIVE_PATTERNS = ("all2all", "allreduce")
 
 
 def _freeze_value(key: str, v):
@@ -125,36 +126,89 @@ class RouteSpec:
 class WorkloadSpec:
     """Traffic program.
 
-    ``pattern`` is one of the Bernoulli families
-    (``uniform | rep | rsp | bu | mice_elephant``, driven by ``load``) or a
-    collective (``all2all`` with ``rounds``; ``allreduce`` = Rabenseifner
-    over ``ranks`` ranks of ``vec_packets`` packets — first-class here,
-    subsuming the old hand-patched ``Traffic("phase")`` idiom).
+    ``pattern`` is one of the Bernoulli families (``uniform | rep | rsp |
+    bu | mice_elephant`` plus the adversarial ``tornado | shift | hotspot |
+    bursty``, driven by ``load``) or a collective (``all2all`` with
+    ``rounds``; the allreduce family ``allreduce`` = Rabenseifner,
+    ``ring_allreduce``, ``rd_allreduce`` = recursive doubling, over
+    ``ranks`` ranks of ``vec_packets`` packets).  Pattern names are
+    validated against the shared workloads registry
+    (:mod:`repro.workloads.patterns`) — the same registry the engine's
+    ``Traffic`` enforces.
+
+    ``schedule`` picks the collective execution mode: ``""`` (default)
+    keeps each pattern's native semantics (allreduce family: ``barrier``
+    — the parity-locked phase-by-phase execution; ``all2all``:
+    free-running rounds); ``"barrier"`` forces global phase barriers;
+    ``"window"`` pipelines rounds, letting every endpoint run up to
+    ``window`` phases ahead of the globally-completed phase.  Collectives
+    with a schedule compile to a device-resident
+    :class:`repro.workloads.WorkloadProgram` executed by the engine's
+    on-device phase scheduler.
     """
 
     pattern: str = "uniform"
     load: float = 1.0
     rounds: int = 0              # all2all
-    ranks: int = 0               # allreduce; 0 -> largest power of two <= S
+    ranks: int = 0               # allreduce family; 0 -> largest pow2 <= S
     vec_packets: int = 16        # allreduce vector size (packets)
     elephant_frac: float = 0.1   # mice_elephant
     elephant_size: int = 16
+    schedule: str = ""           # collective mode: "" | barrier | window
+    window: int = 1              # lookahead depth for schedule="window"
+    shift: int = 1               # shift: dst = (e + shift) mod S
+    hot_frac: float = 0.1        # hotspot: fraction of incast messages
+    hot_count: int = 1           # hotspot: number of hot endpoints
+    burst_len: float = 8.0       # bursty: mean burst duration (slots)
+    burst_load: float = 1.0      # bursty: injection probability in-burst
 
     def __post_init__(self):
-        known = BERNOULLI_PATTERNS + COLLECTIVE_PATTERNS
-        if self.pattern not in known:
+        kind = check_pattern(self.pattern)
+        check_schedule(self.schedule, self.window)
+        if self.schedule and kind != "collective":
             raise ValueError(
-                f"unknown pattern {self.pattern!r}; expected one of {known} "
-                "(the raw simulator 'phase' pattern is reached via "
-                "pattern='allreduce')")
+                f"schedule={self.schedule!r} needs a collective pattern, "
+                f"got {self.pattern!r} ({kind})")
         if self.pattern == "all2all" and self.rounds <= 0:
             raise ValueError("all2all needs rounds > 0 (0 rounds would "
                              "report instant completion of an empty program)")
-        if self.pattern == "allreduce" and self.ranks:
+        if self.pattern in ("allreduce", "rd_allreduce") and self.ranks:
             if self.ranks < 2 or self.ranks & (self.ranks - 1):
                 raise ValueError(
-                    f"allreduce ranks must be a power of two >= 2 "
-                    f"(Rabenseifner's recursive halving), got {self.ranks}")
+                    f"{self.pattern} ranks must be a power of two >= 2 "
+                    f"(recursive halving/doubling), got {self.ranks}")
+        if self.pattern == "ring_allreduce" and self.ranks and self.ranks < 2:
+            raise ValueError(f"ring_allreduce needs ranks >= 2, got "
+                             f"{self.ranks}")
+        if self.pattern == "shift" and self.shift == 0:
+            raise ValueError("shift pattern needs a non-zero shift offset")
+        if self.pattern == "hotspot":
+            if not 0.0 < self.hot_frac <= 1.0:
+                raise ValueError(f"hot_frac must be in (0, 1], got "
+                                 f"{self.hot_frac}")
+            if self.hot_count < 1:
+                raise ValueError(f"hot_count must be >= 1, got "
+                                 f"{self.hot_count}")
+        if self.pattern == "bursty":
+            if not 0.0 < self.burst_load <= 1.0:
+                raise ValueError(f"burst_load must be in (0, 1], got "
+                                 f"{self.burst_load}")
+            if self.burst_len < 1.0:
+                raise ValueError(f"burst_len must be >= 1 slot, got "
+                                 f"{self.burst_len}")
+            if self.load > self.burst_load:
+                raise ValueError(
+                    f"bursty load {self.load} exceeds burst_load "
+                    f"{self.burst_load}: the long-run offered load can "
+                    "never exceed the in-burst intensity")
+            duty_max = self.burst_len / (self.burst_len + 1.0)
+            if self.load > self.burst_load * duty_max:
+                raise ValueError(
+                    f"bursty duty cycle {self.load / self.burst_load:.3f} "
+                    f"is unreachable: with burst_len {self.burst_len} the "
+                    f"ON fraction tops out at {duty_max:.3f}, so the "
+                    "long-run offered load would silently undershoot "
+                    "`load` — raise burst_len or burst_load")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -202,7 +256,9 @@ class Experiment:
     def resolved_metric(self) -> str:
         if self.metric != "auto":
             return self.metric
-        if self.workload.pattern in COLLECTIVE_PATTERNS:
+        # registry kind, not a static tuple: collectives registered after
+        # import (register_program_builder) resolve to completion too
+        if check_pattern(self.workload.pattern) == "collective":
             return "completion"
         return "throughput"
 

@@ -13,7 +13,8 @@ from .analytics import (
     prob_dstar_leq, dstar_thresholds, mrls_design,
 )
 from .collectives import (
-    all2all_rounds, rabenseifner_phases,
+    all2all_rounds, rabenseifner_phases, ring_allreduce_phases,
+    recursive_doubling_phases,
     all2all_lower_bound_slots, allreduce_lower_bound_slots,
 )
 

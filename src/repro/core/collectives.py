@@ -23,6 +23,8 @@ import numpy as np
 __all__ = [
     "all2all_rounds",
     "rabenseifner_phases",
+    "ring_allreduce_phases",
+    "recursive_doubling_phases",
     "all2all_lower_bound_slots",
     "allreduce_lower_bound_slots",
 ]
@@ -58,6 +60,34 @@ def rabenseifner_phases(n_ranks: int, vec_packets: int) -> list[dict]:
             "packets": max(1, vec_packets >> (log - p)),
         })
     return phases
+
+
+def ring_allreduce_phases(n_ranks: int, vec_packets: int) -> list[dict]:
+    """Phases for ring Allreduce over ``n_ranks`` (any count >= 2).
+
+    ``2 * (n - 1)`` steps (reduce-scatter ring then all-gather ring); every
+    step sends one ``vec / n`` chunk (clamped to >= 1 packet) to the next
+    rank on the ring.  Bandwidth-optimal but latency-heavy — the classic
+    counterpoint to Rabenseifner's log-depth schedule.
+    """
+    assert n_ranks >= 2, "ring allreduce needs at least 2 ranks"
+    i = np.arange(n_ranks, dtype=np.int64)
+    step = {"partner": (i + 1) % n_ranks,
+            "packets": max(1, vec_packets // n_ranks)}
+    return [dict(step) for _ in range(2 * (n_ranks - 1))]
+
+
+def recursive_doubling_phases(n_ranks: int, vec_packets: int) -> list[dict]:
+    """Phases for recursive-doubling Allreduce over ``n_ranks`` (power of
+    two): ``log2(n)`` XOR-partner exchanges of the *full* vector —
+    latency-optimal, bandwidth-redundant (the other end of the trade-off
+    from :func:`ring_allreduce_phases`).
+    """
+    log = int(np.log2(n_ranks))
+    assert 2 ** log == n_ranks, "recursive doubling requires power-of-two ranks"
+    i = np.arange(n_ranks, dtype=np.int64)
+    return [{"partner": i ^ (1 << p), "packets": max(1, vec_packets)}
+            for p in range(log)]
 
 
 # ---------------------------------------------------------------------- #

@@ -54,6 +54,14 @@ host, and the exact completion slot is recorded from the ejection-counter
 crossing).  Replication is a first-class compiled axis: ``make_batch_state``
 stacks R independently-seeded states along a leading replica dimension and
 ``run_*_batch`` drive all replicas through one ``jax.vmap``-ed executable.
+
+Collectives execute as compiled workload programs (``repro.workloads``):
+``Traffic("program")`` carries the static schedule shape, the compiled
+``partner``/``packets``/``expected`` arrays ride in the state, and
+``run_program`` drives every phase of every replica through one
+``lax.while_loop`` with an on-device phase scheduler
+(``_advance_program``) — ``schedule="barrier"`` replays the legacy
+per-phase host loop bitwise, ``schedule="window"`` pipelines rounds.
 """
 from __future__ import annotations
 
@@ -68,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.routing import RoutingTables, pack_port_masks
+from ..workloads.patterns import BERNOULLI_PATTERNS, check_pattern
 
 BIG = jnp.float32(1e9)
 
@@ -108,14 +117,31 @@ class SimConfig:
 
 @dataclasses.dataclass(frozen=True)
 class Traffic:
-    """Traffic program.  ``pattern`` one of:
-    uniform | rep | rsp | bu | mice_elephant | all2all | phase.
+    """Traffic program.  ``pattern`` is validated against the shared
+    workload-pattern registry (:mod:`repro.workloads.patterns`): the
+    Bernoulli families (uniform | rep | rsp | bu | mice_elephant | tornado
+    | shift | hotspot | bursty), ``all2all``, or the engine-level
+    ``phase`` / ``program`` patterns.  Unknown names raise here, at
+    construction — never at trace time.
 
-    * Bernoulli patterns use ``load`` (packets/slot/endpoint).
+    * Bernoulli patterns use ``load`` (packets/slot/endpoint).  The
+      adversarial families add: ``shift`` (static permutation
+      ``(e + shift) mod S``), ``tornado`` (leaf-level half-rotation),
+      ``hotspot`` (``hot_frac`` of messages incast onto endpoints
+      ``0..hot_count-1``), ``bursty`` (on-off Markov modulation with mean
+      burst length ``burst_len`` slots and in-burst intensity
+      ``burst_load``; long-run offered load stays ``load``).
     * ``all2all``: each endpoint sends ``rounds`` single-packet messages to
-      (e + r + 1) mod S.
+      (e + r + 1) mod S, free-running (no round synchronization).
     * ``phase``: each endpoint sends ``phase_packets`` packets to
-      ``partner[e]`` (used for Rabenseifner phases).
+      ``partner[e]`` (the legacy hand-patched single-exchange idiom).
+    * ``program``: a compiled :class:`repro.workloads.CompiledProgram` of
+      ``n_phases`` phases executed by the on-device phase scheduler under
+      ``schedule`` (``"barrier"`` replays the host loop bitwise;
+      ``"window"`` lets endpoints run ``window`` phases ahead of the
+      globally-completed phase).  The program arrays live in the *state*
+      (``make_program_state``); only the static shape/schedule lives here,
+      so runs of same-shaped programs share one compiled executable.
     """
     pattern: str = "uniform"
     load: float = 1.0
@@ -123,6 +149,19 @@ class Traffic:
     phase_packets: int = 0
     elephant_frac: float = 0.1   # fraction of messages that are elephants
     elephant_size: int = 16
+    # adversarial Bernoulli knobs
+    shift: int = 1               # shift: dst = (e + shift) mod S
+    hot_frac: float = 0.1        # hotspot: fraction of incast messages
+    hot_count: int = 1           # hotspot: number of hot endpoints
+    burst_len: float = 8.0       # bursty: mean ON duration (slots)
+    burst_load: float = 1.0      # bursty: injection probability while ON
+    # compiled workload program (schedule shape; arrays live in the state)
+    n_phases: int = 0
+    schedule: str = "barrier"    # "barrier" | "window"
+    window: int = 1              # lookahead depth for schedule="window"
+
+    def __post_init__(self):
+        check_pattern(self.pattern, engine=True)
 
 
 class Simulator:
@@ -326,20 +365,52 @@ class Simulator:
 
         idle = st["msg_rem"] == 0
         pat = traffic.pattern
-        if pat in ("uniform", "rep", "rsp", "bu", "mice_elephant"):
-            start = idle & (jax.random.uniform(k1, (S,)) <
-                            traffic.load / self._mean_msg(traffic))
-            if pat == "uniform" or pat == "mice_elephant":
+        burst_new = None
+        if pat in BERNOULLI_PATTERNS:
+            if pat == "bursty":
+                # two-state Markov (on-off) modulation: in-burst injection
+                # probability is ``burst_load``, mean burst length is
+                # ``burst_len`` slots, and the idle->burst rate is set so
+                # the long-run offered load equals ``load``
+                rho = min(traffic.load / traffic.burst_load, 0.999)
+                p_off = 1.0 / max(traffic.burst_len, 1.0)
+                p_on = min(1.0, p_off * rho / max(1.0 - rho, 1e-9))
+                ka, kb = jax.random.split(k3)
+                was_on = st["burst"] > 0
+                on = jnp.where(was_on,
+                               jax.random.uniform(ka, (S,)) >= p_off,
+                               jax.random.uniform(kb, (S,)) < p_on)
+                burst_new = on.astype(jnp.int32)
+                start = idle & on & (jax.random.uniform(k1, (S,)) <
+                                     traffic.burst_load)
+            else:
+                start = idle & (jax.random.uniform(k1, (S,)) <
+                                traffic.load / self._mean_msg(traffic))
+            if pat in ("uniform", "mice_elephant", "bursty"):
                 dst = jax.random.randint(k2, (S,), 0, S)
             elif pat == "rep":
                 dst = st["perm"]
             elif pat == "rsp":
                 dst = st["sigma"][e // d] * d + (e % d)
-            else:  # bu — two halves exchange uniformly
+            elif pat == "bu":  # two halves exchange uniformly
                 half = S // 2
                 lower = e < half
                 r = jax.random.randint(k2, (S,), 0, half)
                 dst = jnp.where(lower, half + r, r % half)
+            elif pat == "tornado":
+                # adversarial leaf-level half-rotation: every leaf targets
+                # the leaf halfway around the leaf ranking (same slot
+                # offset within the leaf) — zero locality, maximal
+                # pressure on the non-minimal path diversity
+                dst = ((e // d + self.n1 // 2) % self.n1) * d + e % d
+            elif pat == "shift":
+                dst = (e + traffic.shift) % S
+            else:  # hotspot — incast a fraction onto a few hot endpoints
+                kh, ki = jax.random.split(k3)
+                hot = jax.random.uniform(kh, (S,)) < traffic.hot_frac
+                dst = jnp.where(
+                    hot, jax.random.randint(ki, (S,), 0, traffic.hot_count),
+                    jax.random.randint(k2, (S,), 0, S))
             size = jnp.ones((S,), jnp.int32)
             if pat == "mice_elephant":
                 size = jnp.where(jax.random.uniform(k3, (S,)) < traffic.elephant_frac,
@@ -352,6 +423,27 @@ class Simulator:
             start = idle & (st["prog"] < 1)
             dst = st["partner"]
             size = jnp.full((S,), traffic.phase_packets, jnp.int32)
+        elif pat == "program":
+            NP = traffic.n_phases
+            if traffic.schedule == "window":
+                # windowed/pipelined rounds: st["prog"] is the per-endpoint
+                # phase pointer; an endpoint may start its phase-p message
+                # once p is within ``window`` of the globally-completed
+                # phase count
+                ncomp = jnp.sum((st["phase_done"] >= 0).astype(jnp.int32))
+                pe = st["prog"]
+                start = idle & (pe < jnp.minimum(ncomp + traffic.window, NP))
+                idx = jnp.clip(pe, 0, NP - 1) * S + e
+                dst = st["prog_partner"].reshape(-1)[idx]
+                size = st["prog_packets"].reshape(-1)[idx]
+            else:
+                # barrier: one message per endpoint per phase, rows gathered
+                # from the current phase of the compiled program — bitwise
+                # the legacy "phase" inject while a phase is active
+                ph = jnp.minimum(st["phase"], NP - 1)
+                start = idle & (st["prog"] < 1) & (st["phase"] < NP)
+                dst = st["prog_partner"][ph]
+                size = st["prog_packets"][ph]
         else:
             raise ValueError(pat)
 
@@ -399,6 +491,8 @@ class Simulator:
         # sentinel index == pool size -> dropped writes for non-injectors
         widx = jnp.where(ok, jnp.maximum(pid, 0), self.pool)
         st = dict(st)
+        if burst_new is not None:
+            st["burst"] = burst_new
         st["fl_head"] = (st["fl_head"] + n_pop) % self.pool
         st["fl_len"] = st["fl_len"] - n_pop
         st["p_sd"] = st["p_sd"].at[widx].set((src_lr << 16) | dst_lr,
@@ -687,7 +781,7 @@ class Simulator:
         st["p_bh"], st["p_mid"] = p_bh, p_mid
         return st
 
-    def _step(self, st, traffic: Traffic):
+    def _step(self, st, traffic: Traffic, chunk=None, max_slots=None):
         key, k_inj, k_link, *k_xb = jax.random.split(
             st["key"], 3 + self.cfg.speedup)
         st = dict(st)
@@ -697,6 +791,76 @@ class Simulator:
             st = self._crossbar_round(st, k_xb[r], ep_active=True)
         st = self._link_phase(st, k_link)
         st["slot"] = st["slot"] + 1
+        if traffic.pattern == "program":
+            st = self._advance_program(st, traffic, chunk, max_slots)
+        return st
+
+    # ------------------------------------------------------------------ #
+    # on-device phase scheduler for compiled workload programs
+    # ------------------------------------------------------------------ #
+    def _advance_program(self, st, traffic: Traffic, chunk, max_slots):
+        """Per-slot phase bookkeeping for ``Traffic("program")``.
+
+        ``barrier``: when the running phase's ejection target is met (or
+        its chunk-granular ``max_slots`` budget expires), record the exact
+        completion slot in ``phase_done``, bump ``phase``, and reset the
+        transient state (queues' heads/lens, free-list, PRNG key, slot,
+        per-endpoint message program) to what a fresh ``make_state`` would
+        hold — so every phase is bitwise-identical to a standalone
+        host-loop ``run_completion`` and ``phase_done`` holds per-phase
+        durations.
+
+        ``window``: no resets; ejections are cumulative, and phase ``p``
+        completes once total deliveries reach ``expected_cum[p]``
+        (``phase_done`` holds cumulative completion slots).
+        """
+        NP = traffic.n_phases
+        pids = jnp.arange(NP, dtype=jnp.int32)
+        st = dict(st)
+        if traffic.schedule == "window":
+            newly = (st["phase_done"] < 0) & (
+                st["ejected"] >= st["prog_expected_cum"])
+            st["phase_done"] = jnp.where(newly, st["slot"], st["phase_done"])
+            st["phase_ok"] = st["phase_ok"] | newly
+            st["phase"] = jnp.sum((st["phase_done"] >= 0).astype(jnp.int32))
+            return st
+
+        ph = st["phase"]
+        active = ph < NP
+        exp = st["prog_expected"][jnp.minimum(ph, NP - 1)]
+        natural = active & (st["ejected"] >= exp)
+        if max_slots is not None:
+            # mirror the host loop's timeout semantics: it only notices a
+            # stuck phase at a chunk boundary past max_slots, and records
+            # that chunk-granular slot
+            budget_gone = st["slot"] >= max_slots
+            if chunk is not None:
+                budget_gone &= st["slot"] % chunk == 0
+            forced = active & budget_gone & ~natural
+            crossed = natural | forced
+        else:
+            crossed = natural
+        hot = (pids == ph) & crossed
+        st["phase_done"] = jnp.where(hot, st["slot"], st["phase_done"])
+        st["phase_ok"] = st["phase_ok"] | (hot & natural)
+        st["phase"] = ph + crossed.astype(jnp.int32)
+        # fresh-state reset: only what the next phase can observe — queue
+        # buffers keep stale ids (unreachable at length 0) and pool
+        # attributes keep stale packets (unreachable once the free-list is
+        # re-initialized), exactly as behaviour-neutral as in a fresh state
+        zero = lambda k: jnp.where(crossed, 0, st[k])
+        st["slot"] = zero("slot")
+        st["ejected"] = zero("ejected")
+        st["prog"] = zero("prog")
+        st["msg_rem"] = zero("msg_rem")
+        for k in ("qhead", "qlen", "oq_head", "oq_len", "eq_head", "eq_len",
+                  "fl_head"):
+            st[k] = zero(k)
+        st["fl_buf"] = jnp.where(crossed,
+                                 jnp.arange(self.pool, dtype=jnp.int32),
+                                 st["fl_buf"])
+        st["fl_len"] = jnp.where(crossed, self.pool, st["fl_len"])
+        st["key"] = jnp.where(crossed, st["key0"], st["key"])
         return st
 
     # ------------------------------------------------------------------ #
@@ -774,12 +938,39 @@ class Simulator:
     def make_state(self, traffic: Traffic, seed: int = 0) -> dict:
         if self._closed:
             raise RuntimeError("Simulator is closed")
+        if traffic.pattern == "shift" and traffic.shift % self.S == 0:
+            raise ValueError(
+                f"shift offset {traffic.shift} is 0 mod {self.S} endpoints "
+                "(every message would be self-addressed)")
+        if traffic.pattern == "tornado" and self.n1 < 2:
+            raise ValueError("tornado needs at least 2 leaves")
+        if traffic.pattern == "hotspot" and traffic.hot_count > self.S:
+            raise ValueError(
+                f"hot_count {traffic.hot_count} > endpoints {self.S} "
+                "(out-of-range destinations would silently clamp)")
+        if traffic.pattern == "bursty":
+            if traffic.load > traffic.burst_load:
+                raise ValueError(
+                    f"bursty load {traffic.load} exceeds burst_load "
+                    f"{traffic.burst_load}: the long-run offered load can "
+                    "never exceed the in-burst intensity")
+            duty_max = traffic.burst_len / (traffic.burst_len + 1.0)
+            if traffic.load > traffic.burst_load * duty_max:
+                raise ValueError(
+                    f"bursty duty cycle {traffic.load / traffic.burst_load:.3f} "
+                    f"is unreachable: with mean burst length "
+                    f"{traffic.burst_len} the ON fraction tops out at "
+                    f"{duty_max:.3f} (even at p_on = 1), so the long-run "
+                    "offered load would silently undershoot `load` — "
+                    "raise burst_len or burst_load")
         rng = np.random.default_rng(seed)
         seed_arrays = {}
         if traffic.pattern == "rep":
             seed_arrays["perm"] = rng.permutation(self.S).astype(np.int32)
         if traffic.pattern == "rsp":
             seed_arrays["sigma"] = rng.permutation(self.n1).astype(np.int32)
+        if traffic.pattern == "bursty":
+            seed_arrays["burst"] = np.zeros(self.S, np.int32)  # all OFF
         if traffic.pattern == "phase":
             seed_arrays["partner"] = np.zeros(self.S, np.int32)  # set by caller
         st = self.init_state(traffic, seed_arrays)
@@ -923,6 +1114,151 @@ class Simulator:
         return self.run_completion(
             traffic, expected, chunk=chunk, max_slots=max_slots,
             state=self.make_batch_state(traffic, seeds))
+
+    # ------------------------------------------------------------------ #
+    # compiled workload programs (repro.workloads)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def program_traffic(program) -> Traffic:
+        """The static :class:`Traffic` shape of a
+        :class:`repro.workloads.CompiledProgram` — only phase count and
+        schedule; the arrays ride in the state, so same-shaped programs
+        share one compiled executable."""
+        return Traffic("program", n_phases=program.n_phases,
+                       schedule=program.schedule, window=program.window)
+
+    def make_program_state(self, program, seed: int = 0) -> dict:
+        """State for a compiled program run: the base simulator state plus
+        the device-resident schedule arrays and the scheduler registers
+        (``phase`` counter, per-phase ``phase_done`` completion slots,
+        ``phase_ok`` flags, and the phase-reset key ``key0``)."""
+        if program.n_endpoints != self.S:
+            raise ValueError(
+                f"program compiled for {program.n_endpoints} endpoints, "
+                f"fabric has {self.S}")
+        i32 = jnp.int32
+        st = self.make_state(self.program_traffic(program), seed)
+        # copies, not aliases: the state pytree is donated to the program
+        # loop, and donating the CompiledProgram's own arrays would consume
+        # them after one run
+        st["prog_partner"] = jnp.array(program.partner, i32)
+        st["prog_packets"] = jnp.array(program.packets, i32)
+        st["prog_expected"] = jnp.array(program.expected, i32)
+        st["prog_expected_cum"] = jnp.array(program.expected_cum, i32)
+        st["phase"] = jnp.zeros((), i32)
+        st["phase_done"] = jnp.full((program.n_phases,), -1, i32)
+        st["phase_ok"] = jnp.zeros((program.n_phases,), bool)
+        # fresh buffer (`+ 0`), not an alias: the whole state pytree is
+        # donated to the program loop, and a donated buffer may only
+        # appear once
+        st["key0"] = st["key"] + 0
+        return st
+
+    # compiled-schedule arrays that are replica-invariant: one device copy
+    # shared across the vmap axis (key -> unbatched ndim, used to detect
+    # whether a caller-supplied state left them unstacked)
+    _PROG_SHARED = {"prog_partner": 2, "prog_packets": 2,
+                    "prog_expected": 1, "prog_expected_cum": 1}
+
+    def make_program_batch_state(self, program, seeds) -> dict:
+        """``make_program_state`` stacked on a leading replica axis.
+
+        The compiled schedule arrays (``prog_partner`` etc.) are identical
+        for every replica, so they are kept as **one** shared copy instead
+        of being stacked ``R``-fold — on a rounds-heavy program at paper
+        scale the ``[n_phases, S]`` tables are the largest state entries,
+        and the program loop vmaps them with ``in_axes=None``.
+        """
+        states = [self.make_program_state(program, seed=int(s))
+                  for s in seeds]
+        shared = {k: states[0][k] for k in self._PROG_SHARED}
+        for st in states:
+            for k in self._PROG_SHARED:
+                del st[k]
+        batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        batch.update(shared)
+        return batch
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3, 4),
+                       donate_argnums=(1,))
+    def _program_loop(self, st, traffic: Traffic, chunk: int,
+                      max_slots: int):
+        """Device-side program executor: one ``lax.while_loop`` drives all
+        phases of all replicas — the phase counter, per-phase ejection
+        targets, and exact completion slots all live on device, so an
+        R-replica, P-phase collective is one device computation with zero
+        per-phase host round-trips."""
+        batched = st["ejected"].ndim == 1
+        step = lambda s: self._step(s, traffic, chunk=chunk,
+                                    max_slots=max_slots)
+        if batched:
+            # replica-invariant schedule arrays ride unbatched
+            # (in_axes/out_axes None): one shared device copy, no R-fold
+            # gather traffic.  A caller-built state that did stack them is
+            # detected by ndim and mapped normally.
+            axes = {k: None if st[k].ndim == self._PROG_SHARED.get(k, -1)
+                    else 0 for k in st}
+            step = jax.vmap(step, in_axes=(axes,), out_axes=axes)
+
+        def chunk_body(s):
+            return jax.lax.scan(lambda c, _: (step(c), None), s, None,
+                                length=chunk)[0]
+
+        if traffic.schedule == "window":
+            def cond(s):
+                running = ~jnp.all(s["phase_done"][..., -1] >= 0)
+                return running & (jnp.max(s["slot"]) < max_slots)
+        else:
+            # barrier phases force-advance at their chunk-granular
+            # max_slots budget, so the phase counter always reaches
+            # n_phases eventually
+            def cond(s):
+                return ~jnp.all(s["phase"] >= traffic.n_phases)
+
+        return jax.lax.while_loop(cond, chunk_body, st)
+
+    def run_program(self, program, *, chunk: int = 16,
+                    max_slots: int = 60_000, seed: int = 0, seeds=None,
+                    state: Optional[dict] = None) -> dict:
+        """Run a compiled :class:`repro.workloads.CompiledProgram` to
+        completion, entirely on device.
+
+        One of ``seed`` (scalar run), ``seeds`` (fresh batched run), or
+        ``state`` (pre-built scalar/batched state — consumed, like
+        ``run_completion``).  Returns ``slots`` (total), ``completed``,
+        ``pool_stall``, and ``phase_slots`` (``[..., n_phases]`` — exact
+        per-phase durations under ``barrier``, cumulative completion slots
+        under ``window``); per-replica arrays when batched.
+        """
+        assert max_slots < (1 << 23), \
+            "max_slots overflows the p_bh born-slot packing (< 2^23)"
+        traffic = self.program_traffic(program)
+        if state is not None:
+            st = state
+        elif seeds is not None:
+            st = self.make_program_batch_state(program, seeds)
+        else:
+            st = self.make_program_state(program, seed)
+        st = {k: jnp.asarray(v) for k, v in st.items()}
+        with _quiet_cpu_donation():
+            st = self._program_loop(st, traffic, chunk, max_slots)
+        done = np.asarray(st["phase_done"])
+        ok = np.asarray(st["phase_ok"])
+        if traffic.schedule == "window":
+            # phases the run never completed report the final slot
+            final = np.asarray(st["slot"])[..., None]
+            done = np.where(done >= 0, done, final)
+            slots = done[..., -1]
+        else:
+            slots = done.sum(axis=-1)
+        completed = ok.all(axis=-1)
+        if completed.ndim == 0:
+            return {"slots": int(slots), "completed": bool(completed),
+                    "pool_stall": int(st["pool_stall"]),
+                    "phase_slots": done, "state": st}
+        return {"slots": slots, "completed": completed,
+                "pool_stall": np.asarray(st["pool_stall"]),
+                "phase_slots": done, "state": st}
 
 
 def percentiles(hist: np.ndarray, qs) -> dict:

@@ -1,0 +1,38 @@
+"""Declarative workload programs: a collective/traffic IR, its compiler,
+and the shared pattern registry.
+
+Three layers (see docs/DESIGN.md "Workload programs"):
+
+* **IR** — :class:`WorkloadProgram`: ``[n_phases, S]`` per-endpoint
+  ``partner`` / ``packets`` arrays, execution-agnostic.
+* **Compiler** — :func:`compile_program` lowers a program plus a
+  dependency schedule (``barrier`` or ``window=W``) to the device arrays
+  the engine's on-device phase scheduler consumes
+  (:class:`CompiledProgram`).
+* **Library** — :mod:`repro.workloads.programs` builds the standard
+  collectives (shifted-exchange all2all, Rabenseifner / ring /
+  recursive-doubling allreduce); :mod:`repro.workloads.patterns` is the
+  single pattern-name registry shared by ``WorkloadSpec`` and the engine.
+
+This package never imports the engine: programs are compiled to plain
+device arrays and handed to ``Simulator.run_program``.
+"""
+from .compile import CompiledProgram, compile_program
+from .ir import WorkloadProgram
+from .patterns import (BERNOULLI_PATTERNS, COLLECTIVE_PATTERNS, SCHEDULES,
+                       check_pattern, check_schedule, pattern_kinds,
+                       register_pattern)
+from .programs import (PROGRAM_BUILDERS, all2all_program,
+                       build_collective_program, rabenseifner_program,
+                       rd_allreduce_program, register_program_builder,
+                       ring_allreduce_program)
+
+__all__ = [
+    "WorkloadProgram", "CompiledProgram", "compile_program",
+    "BERNOULLI_PATTERNS", "COLLECTIVE_PATTERNS", "SCHEDULES",
+    "check_pattern", "check_schedule", "pattern_kinds", "register_pattern",
+    "PROGRAM_BUILDERS", "register_program_builder",
+    "build_collective_program",
+    "all2all_program", "rabenseifner_program", "ring_allreduce_program",
+    "rd_allreduce_program",
+]

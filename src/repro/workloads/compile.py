@@ -1,0 +1,81 @@
+"""Compile a :class:`WorkloadProgram` to device-resident schedule arrays.
+
+The compiled form is what the engine's on-device phase scheduler consumes
+(see ``Traffic("program")`` in :mod:`repro.simulator.engine`):
+
+* ``partner`` / ``packets``     — int32 ``[n_phases, S]`` device arrays,
+  gathered row-wise (barrier) or element-wise (windowed) at inject;
+* ``expected``                  — int32 ``[n_phases]`` per-phase ejection
+  targets (``sum(packets[p])``), the phase-advance thresholds of the
+  barrier schedule;
+* ``expected_cum``              — the inclusive prefix sum, the thresholds
+  of the windowed schedule (ejections are cumulative across overlapped
+  phases, so phase ``p`` counts as complete once *total* deliveries reach
+  ``expected_cum[p]``);
+* ``schedule`` / ``window``     — the dependency mode.  ``barrier``
+  replays the legacy host loop exactly (fresh per-phase state, bitwise
+  parity-locked); ``window=W`` lets every endpoint run up to ``W`` phases
+  ahead of the globally-completed phase count (pipelined rounds).
+
+Two compilations of the same program always conserve total packets:
+``expected_cum[-1]`` is schedule-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ir import WorkloadProgram
+from .patterns import check_schedule
+
+__all__ = ["CompiledProgram", "compile_program"]
+
+_INT32_MAX = (1 << 31) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledProgram:
+    """Device-array form of a :class:`WorkloadProgram` plus its schedule."""
+
+    name: str
+    partner: jnp.ndarray        # [n_phases, S] int32
+    packets: jnp.ndarray        # [n_phases, S] int32
+    expected: jnp.ndarray       # [n_phases]    int32
+    expected_cum: jnp.ndarray   # [n_phases]    int32
+    n_phases: int
+    n_endpoints: int
+    schedule: str               # "barrier" | "window"
+    window: int
+
+    @property
+    def total_packets(self) -> int:
+        """Schedule-independent total (the conservation invariant)."""
+        return int(self.expected_cum[-1])
+
+
+def compile_program(program: WorkloadProgram, *, schedule: str = "barrier",
+                    window: int = 1) -> CompiledProgram:
+    """Lower ``program`` to device arrays under a dependency schedule."""
+    check_schedule(schedule, window)
+    if not schedule:
+        schedule = "barrier"
+    program.validate()
+    expected = program.expected()                       # int64 [n_phases]
+    cum = np.cumsum(expected)
+    if int(cum[-1]) > _INT32_MAX:
+        raise ValueError(
+            f"program total of {int(cum[-1])} packets overflows the int32 "
+            "ejection counter")
+    return CompiledProgram(
+        name=program.name,
+        partner=jnp.asarray(program.partner, jnp.int32),
+        packets=jnp.asarray(program.packets, jnp.int32),
+        expected=jnp.asarray(expected, jnp.int32),
+        expected_cum=jnp.asarray(cum, jnp.int32),
+        n_phases=program.n_phases,
+        n_endpoints=program.n_endpoints,
+        schedule=schedule,
+        window=window if schedule == "window" else 1,
+    )

@@ -1,0 +1,120 @@
+"""The single registry of workload-pattern names.
+
+Both the declarative layer (:class:`repro.api.specs.WorkloadSpec`) and the
+engine (:class:`repro.simulator.engine.Traffic`) validate pattern names
+against this module, so a typo'd pattern raises the same error everywhere
+instead of silently injecting nothing.
+
+Kinds:
+
+* ``bernoulli``  — open-loop load-driven injection, measured with the
+  throughput / latency metrics.  Includes the adversarial families
+  (``tornado`` / ``shift`` permutations, ``hotspot`` incast, ``bursty``
+  on-off Markov) used to stress non-minimal routing.
+* ``collective`` — finite programs measured to completion.  All but the
+  legacy free-running ``all2all`` compile to a
+  :class:`repro.workloads.WorkloadProgram` and execute device-resident.
+* ``engine``     — raw simulator-level patterns (``phase``, ``program``)
+  that the spec layer reaches only through a collective pattern.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+__all__ = [
+    "BERNOULLI_PATTERNS",
+    "COLLECTIVE_PATTERNS",
+    "ENGINE_ONLY_PATTERNS",
+    "SCHEDULES",
+    "pattern_kinds",
+    "check_pattern",
+    "check_schedule",
+]
+
+# open-loop Bernoulli injection (drawn fresh each slot, driven by ``load``)
+BERNOULLI_PATTERNS = ("uniform", "rep", "rsp", "bu", "mice_elephant",
+                      "tornado", "shift", "hotspot", "bursty")
+# finite programs measured to completion
+COLLECTIVE_PATTERNS = ("all2all", "allreduce", "ring_allreduce",
+                       "rd_allreduce")
+# engine-level patterns the spec layer never names directly:
+# ``phase``   — one hand-patched partner exchange (legacy host-loop idiom)
+# ``program`` — a compiled multi-phase WorkloadProgram (device scheduler)
+ENGINE_ONLY_PATTERNS = ("phase", "program")
+
+# collective execution schedules ("" = per-pattern default)
+SCHEDULES = ("", "barrier", "window")
+
+# mutable: registered collectives (register_pattern, called by
+# repro.workloads.programs.register_program_builder) join the built-ins
+_KINDS = (
+    {p: "bernoulli" for p in BERNOULLI_PATTERNS}
+    | {p: "collective" for p in COLLECTIVE_PATTERNS}
+    | {p: "engine" for p in ENGINE_ONLY_PATTERNS}
+)
+
+
+def pattern_kinds() -> Mapping[str, str]:
+    """``{pattern name: kind}`` for every registered pattern."""
+    return dict(_KINDS)
+
+
+def register_pattern(name: str, kind: str = "collective",
+                     *, overwrite: bool = False) -> None:
+    """Register a new pattern name.  Spec-level collectives additionally
+    need a program builder (use
+    :func:`repro.workloads.programs.register_program_builder`, which calls
+    this)."""
+    if kind not in ("bernoulli", "collective", "engine"):
+        raise ValueError(f"unknown pattern kind {kind!r}")
+    if name in _KINDS and not overwrite:
+        raise ValueError(f"pattern {name!r} already registered "
+                         f"({_KINDS[name]})")
+    _KINDS[name] = kind
+
+
+def _spec_names() -> tuple:
+    return tuple(sorted(n for n, k in _KINDS.items() if k != "engine"))
+
+
+def _engine_names() -> tuple:
+    return tuple(sorted(n for n, k in _KINDS.items()
+                        if k != "collective" or n == "all2all"))
+
+
+def check_pattern(name: str, *, engine: bool = False) -> str:
+    """Validate ``name`` against the registry and return its kind.
+
+    ``engine=True`` accepts what the raw simulator ``Traffic`` executes
+    (Bernoulli families + ``all2all`` + the engine-only patterns —
+    registered collectives reach the engine as compiled
+    ``Traffic("program")`` runs, never by name);
+    ``engine=False`` accepts what a ``WorkloadSpec`` may declare
+    (Bernoulli + collectives, including registered ones).
+    """
+    kind = _KINDS.get(name)
+    ok = (kind == "bernoulli"
+          or (engine and (kind == "engine" or name == "all2all"))
+          or (not engine and kind == "collective"))
+    if not ok:
+        known = _engine_names() if engine else _spec_names()
+        hint = ""
+        if not engine and kind == "engine":
+            hint = (" (engine-only pattern: reach it via a collective such "
+                    "as pattern='allreduce')")
+        raise ValueError(f"unknown pattern {name!r}; expected one of "
+                         f"{known}{hint}")
+    return kind
+
+
+def check_schedule(schedule: str, window: int) -> None:
+    """Validate a collective ``schedule``/``window`` pair."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{SCHEDULES}")
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if window != 1 and schedule != "window":
+        raise ValueError(
+            f"window={window} requires schedule='window' (got "
+            f"schedule={schedule!r})")

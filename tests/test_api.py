@@ -312,6 +312,61 @@ def test_batched_allreduce_parity_with_scalar():
             assert res.per_replica["phase_slots"][i] == ref.phase_slots
 
 
+def test_batched_collective_result_json_roundtrip_and_aggregates():
+    # a batched (replicas=R) collective Result carries per-replica
+    # phase_slots tuples + slots aggregates, and survives a JSON round
+    # trip losslessly
+    res = run(Experiment(network=TINY, route=ROUTE,
+                         workload=WorkloadSpec("allreduce", ranks=16,
+                                               vec_packets=8),
+                         max_slots=3000, replicas=3, seed=2))
+    assert res.replica_seeds == (2, 3, 4)
+    rows = res.per_replica["phase_slots"]
+    assert len(rows) == 3 and all(len(row) == 8 for row in rows)
+    assert all(isinstance(v, int) for row in rows for v in row)
+    # scalar conveniences are across-replica means; phase_slots means are
+    # per-phase columns
+    assert set(res.aggregates) >= {"slots", "pool_stall"}
+    assert res.slots == pytest.approx(res.aggregates["slots"]["mean"])
+    assert res.phase_slots == tuple(
+        pytest.approx(np.mean([row[i] for row in rows]))
+        for i in range(8))
+    per_rep_totals = [sum(row) for row in rows]
+    assert list(res.per_replica["slots"]) == per_rep_totals
+    again = Result.from_json(res.to_json())
+    assert again == res
+    assert again.per_replica["phase_slots"] == rows
+
+
+def test_run_new_collectives_end_to_end():
+    with SimulatorCache() as cache:
+        for wl in (WorkloadSpec("ring_allreduce", ranks=8, vec_packets=16),
+                   WorkloadSpec("rd_allreduce", ranks=16, vec_packets=8),
+                   WorkloadSpec("all2all", rounds=3, schedule="window",
+                                window=3),
+                   WorkloadSpec("allreduce", ranks=16, vec_packets=8,
+                                schedule="window", window=4)):
+            res = run(Experiment(network=TINY, route=ROUTE, workload=wl,
+                                 max_slots=4000), cache=cache)
+            assert res.metric == "completion" and res.completed
+            assert res.slots >= 1 and res.phase_slots is not None
+            assert Result.from_json(res.to_json()) == res
+
+
+def test_run_adversarial_bernoulli_end_to_end():
+    with SimulatorCache() as cache:
+        for wl in (WorkloadSpec("tornado", load=0.3),
+                   WorkloadSpec("shift", load=0.3, shift=5),
+                   WorkloadSpec("hotspot", load=0.3, hot_frac=0.3,
+                                hot_count=2),
+                   WorkloadSpec("bursty", load=0.2, burst_len=6.0,
+                                burst_load=0.8)):
+            res = run(Experiment(network=TINY, route=ROUTE, workload=wl,
+                                 warm=20, measure=40), cache=cache)
+            assert res.metric == "throughput"
+            assert res.throughput is not None and res.throughput > 0
+
+
 def test_batched_result_json_roundtrip():
     res = run(Experiment(network=TINY, route=ROUTE,
                          workload=WorkloadSpec("uniform", load=0.5),

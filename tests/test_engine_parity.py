@@ -1,6 +1,6 @@
 """Bitwise parity gates for the device-resident step overhaul.
 
-Two independent locks:
+Three independent locks:
 
 * **Golden parity** — the compact-table + free-list + donated-buffer engine
   (``backend="xla"``) must reproduce the committed pre-overhaul outputs
@@ -11,21 +11,41 @@ Two independent locks:
 * **Backend parity** — ``backend="pallas"`` (fused arbitration kernel,
   interpret mode on CPU) must produce the *identical state pytree* as
   ``backend="xla"`` after a chunked run, for every policy.
+* **Collective parity** — the device-resident program scheduler
+  (``Traffic("program")``, ``schedule="barrier"``) must reproduce the
+  committed host-loop Rabenseifner outputs
+  (``tests/golden/collective_parity.json``, captured from the pre-program
+  per-phase ``run_completion`` loop by
+  ``scripts/capture_collective_golden.py``) *bitwise* for every policy:
+  per-phase ``phase_slots``, total ``slots``, ``completed``, and
+  ``pool_stall`` — including the chunk-granular timeout slots of phases
+  that never complete (the ``valiant`` rows).
 
-Both engines share one PRNG stream by construction, so any divergence is
+All engines share one PRNG stream by construction, so any divergence is
 a real behaviour change, not noise.
 """
 import json
 import pathlib
+import sys
 
 import numpy as np
 import pytest
 
 from repro.core import mrls, build_tables
 from repro.simulator.engine import Simulator, SimConfig, Traffic
+from repro.workloads import compile_program, rabenseifner_program
+
+# the host-loop oracle lives next to the golden capture script — one
+# implementation for capture, test, and docs, so they cannot drift
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "scripts"))
+from capture_collective_golden import host_loop_allreduce  # noqa: E402
 
 GOLDEN = json.loads(
     (pathlib.Path(__file__).parent / "golden" / "engine_parity.json")
+    .read_text())
+COLLECTIVE = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "collective_parity.json")
     .read_text())
 
 
@@ -75,3 +95,46 @@ def test_pallas_backend_matches_xla_bitwise(tables, policy):
 def test_unknown_backend_rejected(tables):
     with pytest.raises(ValueError, match="backend"):
         Simulator(tables, SimConfig(backend="cuda"))
+
+
+# ---------------------------------------------------------------------- #
+# collective parity: device-resident barrier programs == host phase loop
+# ---------------------------------------------------------------------- #
+def _device_program_allreduce(sim, ranks, vec_packets, seed, chunk,
+                              max_slots):
+    cp = compile_program(rabenseifner_program(sim.S, ranks, vec_packets),
+                         schedule="barrier")
+    r = sim.run_program(cp, chunk=chunk, max_slots=max_slots, seed=seed)
+    return {"slots": int(r["slots"]), "completed": bool(r["completed"]),
+            "pool_stall": int(r["pool_stall"]),
+            "phase_slots": [int(s) for s in r["phase_slots"]]}
+
+
+@pytest.fixture(scope="module")
+def collective_tables():
+    return build_tables(mrls(**COLLECTIVE["fabric"]))
+
+
+@pytest.mark.parametrize("policy", sorted(COLLECTIVE["policies"]))
+def test_collective_golden_parity_bitwise(collective_tables, policy):
+    gp = COLLECTIVE["policies"][policy]
+    with Simulator(collective_tables,
+                   SimConfig(policy=policy, max_hops=10, pool=4096)) as sim:
+        got = _device_program_allreduce(
+            sim, COLLECTIVE["ranks"], COLLECTIVE["vec_packets"],
+            COLLECTIVE["seed"], COLLECTIVE["chunk"],
+            COLLECTIVE["max_slots"])
+    assert got == gp                                  # bitwise, no approx
+
+
+def test_program_path_matches_live_host_loop(collective_tables):
+    # belt-and-suspenders: beyond the committed golden, the surviving
+    # host-loop primitive (``Traffic("phase")`` + ``run_completion``) must
+    # agree with the program scheduler when both run today
+    with Simulator(collective_tables,
+                   SimConfig(policy="polarized", max_hops=10,
+                             pool=4096)) as sim:
+        args = (sim, COLLECTIVE["ranks"], COLLECTIVE["vec_packets"],
+                COLLECTIVE["seed"], COLLECTIVE["chunk"],
+                COLLECTIVE["max_slots"])
+        assert _device_program_allreduce(*args) == host_loop_allreduce(*args)
