@@ -1,19 +1,47 @@
 #!/usr/bin/env bash
-# Tier-1 CI: test suite + declarative-API smoke run + step-loop benchmark.
-#   bash scripts/ci.sh
+# Tier-1 CI driver.  Two lanes:
+#
+#   bash scripts/ci.sh        # full lane (default): entire test suite,
+#                             # every smoke, every bench + regression gate
+#                             # (nightly schedule / manual dispatch)
+#   bash scripts/ci.sh pr     # PR lane: pytest -m "not slow" + the tiny
+#                             # smokes — minutes, not tens of minutes
+#
+# Every smoke/bench writes into artifacts/; the directory is created up
+# front so the workflow's artifact-upload steps never race a step that
+# failed before creating it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+LANE="${1:-full}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+mkdir -p artifacts
 
-echo "== tier-1: pytest =="
+if [ "$LANE" = "pr" ]; then
+    echo "== PR lane: pytest -m 'not slow' =="
+    python -m pytest -x -q -m "not slow"
+
+    echo "== smoke: repro.api CLI on a tiny spec =="
+    python -m repro.api run examples/specs/tiny_mrls.json
+
+    echo "== smoke: memory estimator on the tiny all2all spec =="
+    python -m repro.api estimate examples/specs/tiny_mrls_a2a.json \
+        --out artifacts/tiny_estimate.json
+
+    echo "CI OK (pr lane)"
+    exit 0
+elif [ "$LANE" != "full" ]; then
+    echo "unknown lane '$LANE' (expected: pr | full)" >&2
+    exit 2
+fi
+
+echo "== tier-1: pytest (full suite, slow tests included) =="
 python -m pytest -x -q
 
 echo "== smoke: repro.api CLI on a tiny spec =="
 python -m repro.api run examples/specs/tiny_mrls.json
 
 echo "== smoke: batched (vmapped) replicas=2 completion run =="
-mkdir -p artifacts
 python -m repro.api run examples/specs/tiny_mrls_a2a.json \
     --replicas 2 --out artifacts/batched_smoke_result.json
 
@@ -22,6 +50,12 @@ echo "== smoke: workload programs (adversarial + collective schedules) =="
 # all2all/allreduce, all through the declarative CLI
 python -m repro.api run examples/specs/tiny_workloads.json \
     --out artifacts/workloads_smoke_result.json
+
+echo "== smoke: memory estimator on the headline all2all ladder =="
+# prices every (size, family) point up to 100k endpoints — builds the
+# topologies but no simulators, so this is minutes of numpy, no jit
+python -m repro.api estimate examples/specs/headline_a2a.json \
+    --out artifacts/headline_estimates.json
 
 echo "== bench: step-loop slots/sec on the tiny fabric =="
 # emits artifacts/BENCH_step.json and fails if the post-overhaul engine
@@ -37,4 +71,12 @@ python benchmarks/bench_collective.py --fabric tiny \
     --out artifacts/BENCH_collective.json \
     --check benchmarks/BENCH_collective.json
 
-echo "CI OK"
+echo "== bench: extreme-scale headline sweep (tiny points) =="
+# emits artifacts/BENCH_scale.json and fails if the windowed-program /
+# raw-pattern slots-per-sec ratio regresses >20% against the committed
+# benchmarks/BENCH_scale.json tiny baseline (same-process interleaved
+# measurement, so the gate is host-speed independent)
+python benchmarks/bench_scale.py --sizes tiny \
+    --out artifacts/BENCH_scale.json --check benchmarks/BENCH_scale.json
+
+echo "CI OK (full lane)"

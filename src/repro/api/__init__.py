@@ -26,6 +26,7 @@ from .registry import (register_topology, topology_families, build_network,
                        workload_patterns)
 from .runner import (Result, SimulatorCache, open_simulator, routing_tables,
                      run, run_all)
+from .memory import estimate_memory, format_bytes
 from .sweep import expand_axes, sweep
 
 __all__ = [
@@ -35,5 +36,6 @@ __all__ = [
     "workload_patterns",
     "Result", "SimulatorCache", "open_simulator", "routing_tables", "run",
     "run_all",
+    "estimate_memory", "format_bytes",
     "expand_axes", "sweep",
 ]

@@ -10,6 +10,10 @@ Commands:
 * ``sweep <spec.json> [--replicas R] [--out results.json]`` — spec file
   holds ``{"base": <experiment>, "axes": {"workload.load": [...], ...}}``;
   a seed-only axis is folded into one batched run per remaining grid point.
+* ``estimate <spec.json> [--out est.json]`` — price every experiment's
+  memory footprint (routing tables, per-replica state, transients) via
+  :func:`repro.api.estimate_memory` *without* running anything — the
+  pre-flight check for extreme-scale fabrics.
 * ``families`` — list registered topology families.
 * ``patterns`` — list the workload-pattern registry (Bernoulli families,
   collectives, and which collectives compile to device-resident programs).
@@ -24,6 +28,7 @@ import json
 import sys
 from typing import List, Optional
 
+from .memory import estimate_memory, format_bytes
 from .runner import Result, run_all
 from .registry import topology_families, workload_patterns
 from .specs import Experiment
@@ -87,6 +92,30 @@ def _cmd_sweep(args) -> int:
     return 0
 
 
+def _cmd_estimate(args) -> int:
+    doc = _load(args.spec)
+    specs = doc["experiments"] if "experiments" in doc else [doc]
+    exps = [Experiment.from_dict(d) for d in specs]
+    if args.replicas is not None:
+        exps = [e.override("replicas", args.replicas) for e in exps]
+    records = []
+    for e in exps:
+        est = estimate_memory(e)
+        records.append({"name": e.label(), **est})
+        dims = est["dims"]
+        print(f"{e.label()}  S={dims['n_endpoints']}  "
+              f"masks={est['tables']['mask_layout']}  "
+              f"tables={format_bytes(est['tables']['device_mask_bytes'] + est['tables']['dist_leaf_bytes'])}  "
+              f"state/replica={format_bytes(est['state_bytes_per_replica'])}  "
+              f"total={format_bytes(est['total_bytes'])}  "
+              f"peak={format_bytes(est['peak_bytes'])}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {len(records)} estimate(s) to {args.out}")
+    return 0
+
+
 def _cmd_families(_args) -> int:
     for name in topology_families():
         print(name)
@@ -120,6 +149,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_sweep.add_argument("--replicas", type=int, default=None,
                          help="override the base experiment's replicas (>= 1)")
     p_sweep.set_defaults(fn=_cmd_sweep)
+
+    p_est = sub.add_parser(
+        "estimate", help="estimate memory for experiment spec(s), no run")
+    p_est.add_argument("spec", help="path to the experiment JSON file")
+    p_est.add_argument("--out", help="write full estimate JSON records here")
+    p_est.add_argument("--replicas", type=int, default=None,
+                       help="override replicas for the estimate")
+    p_est.set_defaults(fn=_cmd_estimate)
 
     p_fam = sub.add_parser("families", help="list topology families")
     p_fam.set_defaults(fn=_cmd_families)

@@ -4,8 +4,10 @@ from .topology import (
     Topology, mrls, fat_tree, oft, dragonfly, dragonfly_plus, rfc,
 )
 from .routing import (
-    bfs_distances, RoutingTables, build_tables, polarized_port_mask,
-    route_packet_host, find_corners, POLICIES,
+    bfs_distances, RoutingTables, build_tables, pack_port_masks,
+    iter_port_mask_blocks, mask_table_bytes, polarized_port_mask,
+    route_packet_host, find_corners, POLICIES, MASK_LAYOUTS,
+    DENSE_MASK_LIMIT,
 )
 from .analytics import (
     Metrics, exact_metrics, theta, cost_links, cost_switches,

@@ -25,12 +25,24 @@ __all__ = [
     "RoutingTables",
     "build_tables",
     "pack_port_masks",
+    "iter_port_mask_blocks",
+    "mask_table_bytes",
     "polarized_port_mask",
     "route_packet_host",
     "POLICIES",
+    "MASK_LAYOUTS",
+    "DENSE_MASK_LIMIT",
 ]
 
 POLICIES = ("polarized", "minimal_adaptive", "ksp", "ugal", "valiant")
+
+MASK_LAYOUTS = ("auto", "dense", "blocked")
+
+# ``masks="auto"`` switches to the blocked (streamed) layout once one dense
+# numpy mask table would exceed this many bytes — small fabrics keep the
+# dense arrays around for host-side tooling, paper-scale fabrics never
+# materialize them.
+DENSE_MASK_LIMIT = 256 * 1024 * 1024
 
 
 # ---------------------------------------------------------------------- #
@@ -77,6 +89,22 @@ class RoutingTables:
     (``nbrs[c, p] >= 0 and dist_leaf[t, nbrs[c, p]] == dist_leaf[t, c] - 1``).
     Minimal policies (``minimal_adaptive``/``ksp``/``ugal``/``valiant``) test
     these bits instead of gathering whole ``[P]`` distance rows per packet.
+
+    Two mask layouts exist (``mask_layout``):
+
+    * ``"dense"``   — ``min_mask``/``away_mask`` hold the full
+      ``[N1, N, W]`` uint32 arrays (small fabrics; host-side tooling).
+    * ``"blocked"`` — the dense arrays are **never materialized**
+      (``min_mask is None``); consumers stream ``leaf_block``-row leaf
+      blocks through :meth:`mask_blocks` instead.  Peak host memory for
+      the mask tables drops from ``2 * N1 * N * W * 4`` retained bytes to
+      two transient ``leaf_block * N * W * 4``-byte blocks, which is what
+      makes the paper's 100K-endpoint fabrics buildable on ordinary hosts
+      (the simulator streams the blocks straight into its device tables).
+
+    Either way the *values* are identical word for word — the blocked
+    layout is a streaming order, not a different encoding — so simulator
+    results are bitwise independent of the layout.
     """
 
     topo: Topology
@@ -85,6 +113,8 @@ class RoutingTables:
     dist_full: Optional[np.ndarray] = None   # [N, N] (small nets / direct nets)
     min_mask: Optional[np.ndarray] = None    # [N1, N, W] uint32 toward-bits
     away_mask: Optional[np.ndarray] = None   # [N1, N, W] uint32 away-bits
+    mask_layout: str = "dense"     # "dense" | "blocked"
+    leaf_block: int = 256          # block height of the blocked layout
 
     @property
     def diameter_leaf(self) -> int:
@@ -104,6 +134,68 @@ class RoutingTables:
         n1 = len(leaves)
         return float(d.sum() / (n1 * (n1 - 1)))
 
+    def mask_blocks(self, block: Optional[int] = None):
+        """Yield ``(lo, hi, min_block, away_block)`` leaf blocks.
+
+        The one consumer-facing view of the port masks that works for both
+        layouts: dense tables are sliced, blocked tables are computed on
+        the fly from ``dist_leaf`` (one transient ``[block, N, W]`` pair at
+        a time, never the dense array).  Blocks tile ``[0, N1)`` in order.
+        """
+        block = block or self.leaf_block
+        if self.min_mask is not None and self.away_mask is not None:
+            n1 = self.min_mask.shape[0]
+            for lo in range(0, n1, block):
+                hi = min(lo + block, n1)
+                yield lo, hi, self.min_mask[lo:hi], self.away_mask[lo:hi]
+            return
+        yield from iter_port_mask_blocks(self.dist_leaf, self.topo.nbrs,
+                                         block)
+
+
+def _pack_mask_block(dist_block: np.ndarray, nbrs: np.ndarray,
+                     valid: np.ndarray, nbr_safe: np.ndarray):
+    """One ``(min, away)`` uint32 block [B, N, W] for a leaf slice.
+
+    The single bit-packing implementation shared by the dense and blocked
+    layouts — the layouts cannot drift apart because there is nothing to
+    drift between.
+    """
+    p = nbrs.shape[1]
+    w = (p + 31) // 32
+    d = dist_block                                        # [B, N]
+    dn = d[:, nbr_safe]                                   # [B, N, P]
+    toward = valid[None] & (dn == (d[:, :, None] - 1))
+    away = valid[None] & (dn == (d[:, :, None] + 1))
+    b, n = d.shape
+    min_b = np.zeros((b, n, w), np.uint32)
+    away_b = np.zeros((b, n, w), np.uint32)
+    for j in range(p):
+        min_b[:, :, j // 32] |= (
+            toward[:, :, j].astype(np.uint32) << np.uint32(j % 32))
+        away_b[:, :, j // 32] |= (
+            away[:, :, j].astype(np.uint32) << np.uint32(j % 32))
+    return min_b, away_b
+
+
+def iter_port_mask_blocks(dist_leaf: np.ndarray, nbrs: np.ndarray,
+                          block: int = 256):
+    """Stream ``(lo, hi, min_block, away_block)`` leaf blocks.
+
+    Each block is the ``[lo:hi]`` leaf slice of the dense
+    :func:`pack_port_masks` output, computed without ever materializing
+    the ``[N1, N, W]`` arrays — peak memory is one ``[block, N, P]``
+    boolean intermediate plus the two ``[block, N, W]`` uint32 outputs.
+    """
+    n1 = dist_leaf.shape[0]
+    valid = nbrs >= 0
+    nbr_safe = np.where(valid, nbrs, 0)
+    for lo in range(0, n1, block):
+        hi = min(lo + block, n1)
+        min_b, away_b = _pack_mask_block(dist_leaf[lo:hi], nbrs,
+                                         valid, nbr_safe)
+        yield lo, hi, min_b, away_b
+
 
 def pack_port_masks(dist_leaf: np.ndarray, nbrs: np.ndarray,
                     leaf_chunk: int = 256):
@@ -115,36 +207,58 @@ def pack_port_masks(dist_leaf: np.ndarray, nbrs: np.ndarray,
     full Polarized link classification (Forward / Expansion / Contraction
     are conjunctions of toward/away bits w.r.t. source and target, and the
     neighbor distance is recoverable as ``d(c,t) + away - toward``), so the
-    simulator never gathers ``[P]``-wide distance rows.  Work is chunked
-    over target leaves so the [chunk, N, P] boolean intermediate stays
-    bounded on 100K-endpoint fabrics.
+    simulator never gathers ``[P]``-wide distance rows.
+
+    This is the *dense* assembly of :func:`iter_port_mask_blocks` — use
+    the iterator directly (or ``build_tables(..., masks="blocked")``) when
+    the ``2 * N1 * N * W * 4``-byte footprint matters.
     """
     n1, n = dist_leaf.shape
     p = nbrs.shape[1]
     w = (p + 31) // 32
-    valid = nbrs >= 0
-    nbr_safe = np.where(valid, nbrs, 0)
     min_mask = np.zeros((n1, n, w), np.uint32)
     away_mask = np.zeros((n1, n, w), np.uint32)
-    for lo in range(0, n1, leaf_chunk):
-        d = dist_leaf[lo:lo + leaf_chunk]                     # [c, N]
-        dn = d[:, nbr_safe]                                   # [c, N, P]
-        toward = valid[None] & (dn == (d[:, :, None] - 1))
-        away = valid[None] & (dn == (d[:, :, None] + 1))
-        for j in range(p):
-            min_mask[lo:lo + leaf_chunk, :, j // 32] |= (
-                toward[:, :, j].astype(np.uint32) << np.uint32(j % 32))
-            away_mask[lo:lo + leaf_chunk, :, j // 32] |= (
-                away[:, :, j].astype(np.uint32) << np.uint32(j % 32))
+    for lo, hi, min_b, away_b in iter_port_mask_blocks(dist_leaf, nbrs,
+                                                       leaf_chunk):
+        min_mask[lo:hi] = min_b
+        away_mask[lo:hi] = away_b
     return min_mask, away_mask
 
 
-def build_tables(topo: Topology, full: bool = False) -> RoutingTables:
+def mask_table_bytes(n1: int, n: int, p: int) -> int:
+    """Bytes of ONE dense ``[N1, N, W]`` uint32 mask table."""
+    return n1 * n * ((p + 31) // 32) * 4
+
+
+def build_tables(topo: Topology, full: bool = False, *,
+                 masks: str = "auto",
+                 leaf_block: int = 256) -> RoutingTables:
+    """Distance tables + packed port masks for ``topo``.
+
+    ``masks`` picks the port-mask layout: ``"dense"`` materializes the
+    ``[N1, N, W]`` numpy arrays, ``"blocked"`` defers them to streamed
+    leaf blocks (:meth:`RoutingTables.mask_blocks`), and ``"auto"`` (the
+    default) uses ``"blocked"`` once one dense table would exceed
+    :data:`DENSE_MASK_LIMIT` bytes — so small fabrics keep the old
+    behaviour exactly and paper-scale fabrics never hold dense masks.
+    """
+    if masks not in MASK_LAYOUTS:
+        raise ValueError(f"unknown mask layout {masks!r}; expected one of "
+                         f"{MASK_LAYOUTS}")
     dist_leaf = bfs_distances(topo, topo.leaf_ids)
     dist_full = bfs_distances(topo, np.arange(topo.n_switches)) if full else None
-    min_mask, away_mask = pack_port_masks(dist_leaf, topo.nbrs)
+    if masks == "auto":
+        dense_bytes = mask_table_bytes(topo.n_leaves, topo.n_switches,
+                                       topo.max_ports)
+        masks = "dense" if dense_bytes <= DENSE_MASK_LIMIT else "blocked"
+    if masks == "dense":
+        min_mask, away_mask = pack_port_masks(dist_leaf, topo.nbrs,
+                                              leaf_block)
+    else:
+        min_mask = away_mask = None
     return RoutingTables(topo, dist_leaf, topo.leaf_rank(), dist_full,
-                         min_mask, away_mask)
+                         min_mask, away_mask, mask_layout=masks,
+                         leaf_block=leaf_block)
 
 
 # ---------------------------------------------------------------------- #

@@ -12,6 +12,18 @@ Logical axes used throughout the model code:
 
 The same model code therefore runs on the single-pod ``(data, model)`` mesh,
 the multi-pod ``(pod, data, model)`` mesh, and the 1-device test mesh.
+
+The cycle-level simulator shares this resolver through its own profile
+(:meth:`ShardingRules.for_sim_mesh` / :func:`make_sim_mesh`):
+
+* ``replica`` — the vmapped replica batch of ``make_batch_state``; fully
+               independent per entry, so ``Simulator.run_chunk_sharded``
+               splits it over devices with ``jax.shard_map`` (zero
+               cross-device traffic, bitwise-identical per replica).
+* ``switch``  — the queue-major (switch-indexed) state dimension;
+               ``Simulator.shard_state`` places those arrays with
+               :class:`NamedSharding` and GSPMD partitions the jitted
+               step (communication inserted at the link phase).
 """
 from __future__ import annotations
 
@@ -19,9 +31,10 @@ import dataclasses
 from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["Sharder", "ShardingRules"]
+__all__ = ["Sharder", "ShardingRules", "make_sim_mesh"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,8 +42,10 @@ class ShardingRules:
     """Logical name -> mesh axis (or tuple of axes)."""
     fsdp: tuple = ("data",)
     dp: tuple = ("data",)
-    tp: str = "model"
+    tp: Optional[str] = "model"
     sp: Optional[str] = None        # sequence-parallel axis (perf option)
+    replica: Optional[str] = None   # simulator replica-batch axis
+    switch: Optional[str] = None    # simulator queue-major (switch) axis
 
     @staticmethod
     def for_mesh(mesh: Mesh, sequence_parallel: bool = False) -> "ShardingRules":
@@ -43,6 +58,31 @@ class ShardingRules:
             sp="model" if sequence_parallel and "model" in axes else None,
         )
 
+    @staticmethod
+    def for_sim_mesh(mesh: Mesh) -> "ShardingRules":
+        """The simulator profile: only the ``replica``/``switch`` axes
+        resolve (model axes are absent from a simulator mesh, so the
+        model-side names resolve to replicated instead of erroring)."""
+        axes = mesh.axis_names
+        return ShardingRules(
+            fsdp=(), dp=(), tp=None, sp=None,
+            replica="replica" if "replica" in axes else None,
+            switch="switch" if "switch" in axes else None,
+        )
+
+
+def make_sim_mesh(n_devices: Optional[int] = None,
+                  axis: str = "replica") -> Mesh:
+    """A 1-D simulator mesh over ``axis`` (``"replica"`` | ``"switch"``)
+    spanning ``n_devices`` local devices (default: all of them)."""
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(f"asked for {n_devices} devices, have "
+                             f"{len(devices)}")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (axis,))
+
 
 class Sharder:
     """Resolves logical axis names against a concrete mesh."""
@@ -50,6 +90,15 @@ class Sharder:
     def __init__(self, mesh: Mesh, rules: Optional[ShardingRules] = None):
         self.mesh = mesh
         self.rules = rules or ShardingRules.for_mesh(mesh)
+
+    @classmethod
+    def for_simulator(cls, mesh: Optional[Mesh] = None,
+                      n_devices: Optional[int] = None,
+                      axis: str = "replica") -> "Sharder":
+        """The simulator profile: a :func:`make_sim_mesh` mesh (or a
+        caller-built one) with :meth:`ShardingRules.for_sim_mesh` rules."""
+        mesh = mesh if mesh is not None else make_sim_mesh(n_devices, axis)
+        return cls(mesh, ShardingRules.for_sim_mesh(mesh))
 
     def _resolve(self, name) -> Optional[object]:
         if name is None:
@@ -64,6 +113,10 @@ class Sharder:
             return self.rules.tp
         if name == "sp":
             return self.rules.sp
+        if name == "replica":
+            return self.rules.replica
+        if name == "switch":
+            return self.rules.switch
         raise ValueError(f"unknown logical axis {name!r}")
 
     def pspec(self, names: Sequence[Optional[str]]) -> P:

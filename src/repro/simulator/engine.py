@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.routing import RoutingTables, pack_port_masks
+from ..core.routing import RoutingTables
 from ..workloads.patterns import BERNOULLI_PATTERNS, check_pattern
 
 BIG = jnp.float32(1e9)
@@ -195,30 +195,59 @@ class Simulator:
         # compact port bitmasks [N1*N, W]: one uint32-word gather + bit
         # test replaces a [P]-wide distance-row gather per requester
         # (toward-bits drive the minimal policies; toward+away together
-        # encode the full Polarized classification).
-        min_mask, away_mask = tables.min_mask, tables.away_mask
-        if min_mask is None or away_mask is None:  # hand-built tables
-            min_mask, away_mask = pack_port_masks(tables.dist_leaf,
-                                                  topo.nbrs)
-        self.W = min_mask.shape[-1]
-        self.min_mask = jnp.asarray(min_mask.reshape(self.n1 * self.N,
-                                                     self.W))
-        # only Polarized reads the away bits; don't hold a second
-        # [N1*N, W] device table (100s of MB at paper scale) for the
-        # minimal policies
-        self.away_mask = (
-            jnp.asarray(away_mask.reshape(self.n1 * self.N, self.W))
-            if cfg.policy == "polarized" else None)
+        # encode the full Polarized classification).  Built by streaming
+        # leaf blocks — with blocked tables the dense numpy arrays are
+        # never materialized on the host.
+        self.W = (self.P + 31) // 32
+        self.min_mask, self.away_mask = self._build_device_masks(tables)
         self._w_idx = jnp.asarray(np.arange(self.P) // 32, np.int32)
         self._b_idx = jnp.asarray(np.arange(self.P) % 32, np.uint32)
 
         # bit-packing bounds: p_sd packs two leaf ranks into 16 bits each,
-        # p_bh keeps hops in the low byte (born slot above it)
+        # p_bh keeps hops in the low byte (born slot above it); flat index
+        # spaces (mask rows, queue buffers, pool) must fit int32 — audited
+        # here so a 1M-endpoint spec fails loudly at construction instead
+        # of silently wrapping gather indices at runtime
         assert self.n1 < (1 << 16), "leaf rank overflows the p_sd packing"
         assert cfg.max_hops < 255, "hop count overflows the p_bh packing"
+        assert self.n1 * self.N < (1 << 31), \
+            "mask-table row index overflows int32"
+        assert self.NQ * max(self.Q, cfg.out_queue) < (1 << 31), \
+            "flat queue-buffer index overflows int32"
+        assert self.pool < (1 << 31), "pool index overflows int32"
 
         self._init_requester_geometry(topo)
+        self._sharded_cache: dict = {}
         self._closed = False
+
+    def _build_device_masks(self, tables: RoutingTables):
+        """Device mask tables ``[N1*N, W]``, assembled from streamed leaf
+        blocks (:meth:`RoutingTables.mask_blocks`).
+
+        Works for both table layouts.  With ``mask_layout="blocked"`` the
+        dense numpy arrays are never built: numpy peak is one
+        ``[leaf_block, N, W]`` pair, and *retained* memory is the device
+        tables alone.  The assembly itself still peaks at ~2x one
+        policy's tables while ``jnp.concatenate`` copies the collected
+        blocks into the flat arrays (buffer donation is a no-op on the
+        CPU backends this targets, so a true in-place stream is not
+        available) — the blocked layout's durable win is retention, not
+        the assembly transient.  Only Polarized keeps the away bits — the
+        minimal policies never read them, and a second [N1*N, W] device
+        table is 100s of MB at paper scale.
+        """
+        need_away = self.cfg.policy == "polarized"
+        mins, aways = [], []
+        for _lo, _hi, min_b, away_b in tables.mask_blocks():
+            mins.append(jnp.asarray(min_b.reshape(-1, self.W)))
+            if need_away:
+                aways.append(jnp.asarray(away_b.reshape(-1, self.W)))
+            del min_b, away_b
+        min_mask = mins[0] if len(mins) == 1 else jnp.concatenate(mins)
+        away_mask = None
+        if need_away:
+            away_mask = aways[0] if len(aways) == 1 else jnp.concatenate(aways)
+        return min_mask, away_mask
 
     def _init_requester_geometry(self, topo) -> None:
         """Static per-requester index tables for the crossbar hot path.
@@ -299,6 +328,7 @@ class Simulator:
         if self._closed:
             return
         self._closed = True
+        self._sharded_cache.clear()
         if clear:
             jax.clear_caches()
 
@@ -894,6 +924,130 @@ class Simulator:
         with _quiet_cpu_donation():
             return self._run_chunk_batch_jit(st, traffic, n_slots)
 
+    # ------------------------------------------------------------------ #
+    # sharded execution (the repro.parallel.sharding simulator profile)
+    # ------------------------------------------------------------------ #
+    def batch_pspecs(self, st, replica_axis: str) -> dict:
+        """Per-entry ``PartitionSpec``s sharding the leading replica dim.
+
+        Replica-invariant program arrays (``_PROG_SHARED``, one device
+        copy in a batched state) stay replicated; everything else shards
+        dim 0 over ``replica_axis``.
+        """
+        from jax.sharding import PartitionSpec as P
+        specs = {}
+        for k, v in st.items():
+            nd = jnp.asarray(v).ndim
+            if nd == self._PROG_SHARED.get(k, -1):
+                specs[k] = P(*([None] * nd))
+            else:
+                specs[k] = P(replica_axis, *([None] * (nd - 1)))
+        return specs
+
+    def _sharded_chunk_fn(self, traffic: Traffic, n_slots: int, mesh,
+                          replica_axis: str, spec_items):
+        """Compiled ``shard_map``-over-replicas chunk executable.
+
+        Cached per instance on the static shape of the call (traffic,
+        slot count, mesh, state layout) — NOT in a class-level lru_cache,
+        which would pin ``self`` (and its multi-hundred-MB device mask
+        tables at paper scale) past :meth:`close` for the life of the
+        process.  ``close()`` drops the cache with the instance.
+        """
+        key = (traffic, n_slots, mesh, replica_axis, spec_items)
+        cached = self._sharded_cache.get(key)
+        if cached is not None:
+            return cached
+        from .. import _jax_compat  # noqa: F401 — polyfills jax.shard_map
+        specs = dict(spec_items)
+        # shared (replicated) entries ride the inner vmap unbatched
+        axes = {k: 0 if (len(p) and p[0] == replica_axis) else None
+                for k, p in specs.items()}
+
+        def chunk(s):
+            def body(carry, _):
+                return self._step(carry, traffic), None
+            return jax.lax.scan(body, s, None, length=n_slots)[0]
+
+        local = jax.vmap(chunk, in_axes=(axes,), out_axes=axes)
+        shmapped = jax.shard_map(local, mesh=mesh, in_specs=(specs,),
+                                 out_specs=specs, check_vma=False)
+        fn = jax.jit(shmapped, donate_argnums=(0,))
+        self._sharded_cache[key] = fn
+        return fn
+
+    def run_chunk_sharded(self, st, traffic: Traffic, n_slots: int,
+                          sharder):
+        """``run_chunk_batch`` with the replica axis split over the
+        devices of ``sharder.mesh`` via ``jax.shard_map``.
+
+        Replicas are fully independent, so each device steps its own
+        ``R / n_devices`` slice with zero cross-device traffic and every
+        replica is **bitwise identical** to the single-device
+        ``run_chunk_batch`` result (locked by
+        ``tests/test_sharded_engine.py``).  ``st`` is donated (consumed).
+        ``sharder`` is a :class:`repro.parallel.sharding.Sharder` with the
+        simulator profile (``Sharder.for_simulator()``); the replica count
+        must divide evenly over the mesh's ``replica`` axis.
+        """
+        axis = sharder.rules.replica
+        if axis is None:
+            raise ValueError("sharder has no replica axis; build it with "
+                             "Sharder.for_simulator()")
+        n_dev = sharder.mesh.shape[axis]
+        r = st["ejected"].shape[0] if st["ejected"].ndim else None
+        if r is None:
+            raise ValueError("run_chunk_sharded needs a batched state "
+                             "(make_batch_state)")
+        if r % n_dev:
+            raise ValueError(f"{r} replicas do not divide over {n_dev} "
+                             f"devices on mesh axis {axis!r}")
+        specs = self.batch_pspecs(st, axis)
+        fn = self._sharded_chunk_fn(traffic, n_slots, sharder.mesh, axis,
+                                    tuple(sorted(specs.items())))
+        with _quiet_cpu_donation():
+            return fn(st)
+
+    def state_shardings(self, st, sharder) -> dict:
+        """Per-entry :class:`NamedSharding` for the per-switch layout.
+
+        Queue-major arrays (leading dim ``N*P*V`` — input/output queues)
+        and endpoint-major arrays (leading dim ``S`` — NIC queues,
+        message programs) shard dim 0 over the mesh's ``switch`` axis
+        (endpoints are leaf-major, so an endpoint split is a switch
+        split); pool-indexed and scalar entries are replicated, since
+        packets cross switch shards at the link phase.  Dims that the
+        device count does not divide fall back to replicated (the
+        ``constrain_safe`` rule).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axis = sharder.rules.switch
+        if axis is None:
+            raise ValueError("sharder has no switch axis; build it with "
+                             "Sharder.for_simulator(axis='switch')")
+        n_dev = sharder.mesh.shape[axis]
+        switch_major = {self.NQ, self.S}
+        out = {}
+        for k, v in st.items():
+            arr = jnp.asarray(v)
+            shard = (arr.ndim >= 1 and arr.shape[0] in switch_major
+                     and arr.shape[0] % n_dev == 0)
+            spec = (P(axis, *([None] * (arr.ndim - 1))) if shard
+                    else P(*([None] * arr.ndim)))
+            out[k] = NamedSharding(sharder.mesh, spec)
+        return out
+
+    def shard_state(self, st, sharder) -> dict:
+        """Place a scalar state onto the ``switch``-axis layout.
+
+        The jitted step functions then run under GSPMD partitioning —
+        same computation, communication inserted where packets cross
+        shards — so results stay bitwise-identical to the unsharded run.
+        """
+        shardings = self.state_shardings(st, sharder)
+        return {k: jax.device_put(jnp.asarray(v), shardings[k])
+                for k, v in st.items()}
+
     @functools.partial(jax.jit, static_argnums=(0, 2, 4, 5),
                        donate_argnums=(1,))
     def _completion_loop(self, st, traffic: Traffic, expected,
@@ -1028,15 +1182,24 @@ class Simulator:
         }
 
     def run_throughput_batch(self, traffic: Traffic, seeds,
-                             warm: int = 200, measure: int = 400) -> dict:
+                             warm: int = 200, measure: int = 400,
+                             sharder=None) -> dict:
         """Batched ``run_throughput``: one compiled executable, R replicas.
 
-        Returns per-replica ``[R]`` arrays for every metric.
+        Returns per-replica ``[R]`` arrays for every metric.  With a
+        ``sharder`` (simulator profile, replica axis) the replica batch is
+        split over the mesh devices via :meth:`run_chunk_sharded` — same
+        per-replica results, bitwise.
         """
+        if sharder is not None:
+            chunk = lambda s, n: self.run_chunk_sharded(s, traffic, n,
+                                                        sharder)
+        else:
+            chunk = lambda s, n: self.run_chunk_batch(s, traffic, n)
         st = self.make_batch_state(traffic, seeds)
-        st = self.run_chunk_batch(st, traffic, warm)
+        st = chunk(st, warm)
         base = self._counter_snapshot(st)
-        st = self.run_chunk_batch(st, traffic, measure)
+        st = chunk(st, measure)
         m = jax.device_get({k: st[k] - base[k] for k in base}
                            | {"ejected_total": st["ejected"]})
         e, h = np.asarray(m["ejected"]), np.asarray(m["hop_sum"])

@@ -195,6 +195,7 @@ def test_run_result_metric_auto():
 # ---------------------------------------------------------------------- #
 # sweep
 # ---------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_sweep_one_result_per_grid_point():
     base = Experiment(network=TINY, route=ROUTE,
                       workload=WorkloadSpec("uniform", load=0.5),
@@ -207,6 +208,7 @@ def test_sweep_one_result_per_grid_point():
     assert all(r.throughput is not None for r in results)
 
 
+@pytest.mark.slow
 def test_sweep_reuses_simulators_per_fabric():
     base = Experiment(network=TINY, route=ROUTE,
                       workload=WorkloadSpec("uniform", load=0.5),
@@ -255,6 +257,7 @@ FT_ROUTE = RouteSpec(policy="minimal_adaptive", max_hops=4, pool=4096)
 
 @pytest.mark.parametrize("net,route", [(TINY, ROUTE), (FT, FT_ROUTE)],
                          ids=["mrls", "fat_tree"])
+@pytest.mark.slow
 def test_batched_throughput_parity_with_scalar(net, route):
     base = dict(network=net, route=route,
                 workload=WorkloadSpec("uniform", load=0.5),
@@ -338,6 +341,7 @@ def test_batched_collective_result_json_roundtrip_and_aggregates():
     assert again.per_replica["phase_slots"] == rows
 
 
+@pytest.mark.slow
 def test_run_new_collectives_end_to_end():
     with SimulatorCache() as cache:
         for wl in (WorkloadSpec("ring_allreduce", ranks=8, vec_packets=16),
@@ -353,6 +357,7 @@ def test_run_new_collectives_end_to_end():
             assert Result.from_json(res.to_json()) == res
 
 
+@pytest.mark.slow
 def test_run_adversarial_bernoulli_end_to_end():
     with SimulatorCache() as cache:
         for wl in (WorkloadSpec("tornado", load=0.3),
@@ -385,6 +390,7 @@ def test_replicas_validation_and_seeds():
     assert Experiment.from_json(exp.to_json()) == exp
 
 
+@pytest.mark.slow
 def test_sweep_folds_seed_axis_same_results():
     base = Experiment(network=TINY, route=ROUTE,
                       workload=WorkloadSpec("uniform", load=0.5),
@@ -446,6 +452,7 @@ def test_cli_run_replicas_flag(tmp_path, capsys):
     assert len(res.per_replica["throughput"]) == 2
 
 
+@pytest.mark.slow
 def test_cli_sweep_spec_json(tmp_path):
     from repro.api.cli import main
 
@@ -461,3 +468,81 @@ def test_cli_sweep_spec_json(tmp_path):
     loads = [r["experiment"]["workload"]["load"]
              for r in json.loads(out.read_text())]
     assert loads == [0.2, 0.5]
+
+
+# ---------------------------------------------------------------------- #
+# memory estimator (ISSUE 5)
+# ---------------------------------------------------------------------- #
+def test_estimate_memory_exact_table_and_state_bytes():
+    from repro.api import estimate_memory
+
+    est = estimate_memory(TINY, ROUTE)
+    tb = build_tables(build_network(TINY), masks="dense")
+    assert est["tables"]["dist_leaf_bytes"] == tb.dist_leaf.nbytes
+    # polarized holds both device masks; dense layout retains both numpy
+    # twins on the host
+    assert est["tables"]["device_mask_bytes"] == (tb.min_mask.nbytes
+                                                 + tb.away_mask.nbytes)
+    assert est["tables"]["host_mask_bytes"] == (tb.min_mask.nbytes
+                                                + tb.away_mask.nbytes)
+    assert est["tables"]["mask_layout"] == "dense"
+    # state estimate == the real state's array bytes, exactly
+    with Simulator(tb, ROUTE.to_sim_config()) as sim:
+        st = sim.make_state(Traffic("uniform", load=0.5), 0)
+        counted = ("qbuf", "qhead", "qlen", "oq_buf", "oq_head", "oq_len",
+                   "eq_buf", "eq_head", "eq_len", "fl_buf", "p_sd",
+                   "p_mid", "p_bh", "msg_rem", "msg_dst", "prog",
+                   "lat_hist")
+        actual = sum(np.asarray(st[k]).nbytes for k in counted)
+    assert est["state_bytes_per_replica"] == actual
+    assert est["dims"]["n_endpoints"] == 42
+    assert est["peak_bytes"] > est["total_bytes"] > 0
+
+
+def test_estimate_memory_from_experiment_and_replicas():
+    from repro.api import estimate_memory
+
+    exp = Experiment(network=TINY, route=ROUTE, replicas=4)
+    est = estimate_memory(exp)
+    est1 = estimate_memory(TINY, ROUTE, replicas=1)
+    assert est["replicas"] == 4
+    assert (est["total_bytes"] - est1["total_bytes"]
+            == 3 * est1["state_bytes_per_replica"])
+    # minimal policies hold one device mask, not two
+    est_min = estimate_memory(TINY, RouteSpec(policy="minimal_adaptive",
+                                              pool=4096))
+    assert (est_min["tables"]["device_mask_bytes"] * 2
+            == est["tables"]["device_mask_bytes"])
+
+
+def test_estimate_memory_resolves_blocked_layout_at_scale():
+    """Above DENSE_MASK_LIMIT the estimator predicts the blocked layout
+    and zero retained host-mask bytes — priced analytically, no tables
+    are ever built."""
+    from repro.api import estimate_memory
+    from repro.core import routing as routing_mod
+
+    old = routing_mod.DENSE_MASK_LIMIT
+    try:
+        routing_mod.DENSE_MASK_LIMIT = 64
+        est = estimate_memory(TINY, ROUTE)
+    finally:
+        routing_mod.DENSE_MASK_LIMIT = old
+    assert est["tables"]["mask_layout"] == "blocked"
+    assert est["tables"]["host_mask_bytes"] == 0
+
+
+def test_cli_estimate_spec_json(tmp_path, capsys):
+    from repro.api.cli import main
+
+    exp = Experiment(network=TINY, route=ROUTE, name="est.tiny")
+    spec = tmp_path / "spec.json"
+    spec.write_text(exp.to_json())
+    out = tmp_path / "est.json"
+    assert main(["estimate", str(spec), "--replicas", "3",
+                 "--out", str(out)]) == 0
+    assert "est.tiny" in capsys.readouterr().out
+    rec = json.loads(out.read_text())[0]
+    assert rec["name"] == "est.tiny"
+    assert rec["replicas"] == 3
+    assert rec["total_bytes"] > 0

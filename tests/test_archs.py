@@ -10,6 +10,11 @@ from repro.models.common import init_params, count_params
 from repro.models.model import (build_specs, forward_train, loss_fn, prefill,
                                 decode_step, plan)
 
+# per-arch train/decode smokes are minutes of model-side compute with no
+# simulator coverage — long-tail by construction, so the whole module
+# rides the nightly full lane
+pytestmark = pytest.mark.slow
+
 B, S = 2, 64
 
 

@@ -49,12 +49,33 @@ COLLECTIVE = json.loads(
     .read_text())
 
 
-@pytest.fixture(scope="module")
-def tables():
-    return build_tables(mrls(**GOLDEN["fabric"]))
+# every golden below replays bitwise under BOTH mask layouts: the blocked
+# (streamed) tables must be indistinguishable from the dense ones.  The
+# blocked rerun doubles this module's cost, so it rides the slow lane —
+# the PR lane still proves blocked == dense via the cheap table-level
+# invariants in test_routing.py.
+MASK_LAYOUTS = ("dense",
+                pytest.param("blocked", marks=pytest.mark.slow))
+
+# golden replays cost ~25s per policy; the PR lane keeps the two
+# policies that exercise distinct code paths end to end (Polarized's
+# toward+away classification and the minimal bit-test path) and defers
+# the other three to the nightly full lane
+_FAST_POLICIES = ("polarized", "minimal_adaptive")
 
 
-@pytest.mark.parametrize("policy", sorted(GOLDEN["policies"]))
+def _policy_params(policies):
+    return [p if p in _FAST_POLICIES
+            else pytest.param(p, marks=pytest.mark.slow)
+            for p in sorted(policies)]
+
+
+@pytest.fixture(scope="module", params=MASK_LAYOUTS)
+def tables(request):
+    return build_tables(mrls(**GOLDEN["fabric"]), masks=request.param)
+
+
+@pytest.mark.parametrize("policy", _policy_params(GOLDEN["policies"]))
 def test_golden_parity_bitwise(tables, policy):
     gp = GOLDEN["policies"][policy]
     warm, measure = GOLDEN["warm"], GOLDEN["measure"]
@@ -110,12 +131,12 @@ def _device_program_allreduce(sim, ranks, vec_packets, seed, chunk,
             "phase_slots": [int(s) for s in r["phase_slots"]]}
 
 
-@pytest.fixture(scope="module")
-def collective_tables():
-    return build_tables(mrls(**COLLECTIVE["fabric"]))
+@pytest.fixture(scope="module", params=MASK_LAYOUTS)
+def collective_tables(request):
+    return build_tables(mrls(**COLLECTIVE["fabric"]), masks=request.param)
 
 
-@pytest.mark.parametrize("policy", sorted(COLLECTIVE["policies"]))
+@pytest.mark.parametrize("policy", _policy_params(COLLECTIVE["policies"]))
 def test_collective_golden_parity_bitwise(collective_tables, policy):
     gp = COLLECTIVE["policies"][policy]
     with Simulator(collective_tables,

@@ -101,3 +101,79 @@ def test_ksp_randomizes_paths():
         total_paths += len(paths)
         pairs += 1
     assert total_paths > pairs            # randomization across equal paths
+
+
+# ---------------------------------------------------------------------- #
+# leaf-blocked mask layout (ISSUE 5): blocked == dense, always
+# ---------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 1000),
+       n_leaves=st.sampled_from([12, 14, 20, 30]),
+       u=st.integers(2, 5),
+       block=st.integers(1, 40))
+def test_blocked_mask_blocks_tile_dense(seed, n_leaves, u, block):
+    """Streamed leaf blocks tile the dense tables exactly: same values,
+    full disjoint coverage, any block size."""
+    from repro.core import build_tables, mrls
+
+    t = mrls(n_leaves, u=u, d=u, seed=seed)
+    dense = build_tables(t, masks="dense")
+    blocked = build_tables(t, masks="blocked", leaf_block=block)
+    assert dense.mask_layout == "dense" and dense.min_mask is not None
+    assert blocked.mask_layout == "blocked" and blocked.min_mask is None
+    covered = np.zeros(t.n_leaves, bool)
+    for lo, hi, min_b, away_b in blocked.mask_blocks():
+        assert 0 <= lo < hi <= t.n_leaves
+        assert not covered[lo:hi].any()          # disjoint
+        covered[lo:hi] = True
+        np.testing.assert_array_equal(min_b, dense.min_mask[lo:hi])
+        np.testing.assert_array_equal(away_b, dense.away_mask[lo:hi])
+    assert covered.all()                         # complete
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), block=st.integers(1, 17))
+def test_blocked_gather_matches_dense_gather(seed, block):
+    """The engine-style flat assembly of streamed blocks gathers the same
+    words as indexing the dense [N1, N, W] arrays, and every unpacked bit
+    agrees with the distance predicate it encodes."""
+    from repro.core import build_tables, mrls
+
+    t = mrls(16, u=3, d=3, seed=seed)
+    n1, n, p = t.n_leaves, t.n_switches, t.max_ports
+    dense = build_tables(t, masks="dense")
+    blocked = build_tables(t, masks="blocked", leaf_block=block)
+    w = dense.min_mask.shape[-1]
+    flat = {
+        "min": np.concatenate([b.reshape(-1, w)
+                               for _, _, b, _ in blocked.mask_blocks()]),
+        "away": np.concatenate([b.reshape(-1, w)
+                                for _, _, _, b in blocked.mask_blocks()]),
+    }
+    np.testing.assert_array_equal(flat["min"], dense.min_mask.reshape(-1, w))
+    np.testing.assert_array_equal(flat["away"],
+                                  dense.away_mask.reshape(-1, w))
+    rng = np.random.default_rng(seed)
+    dist = dense.dist_leaf
+    for _ in range(50):
+        tl, c = int(rng.integers(n1)), int(rng.integers(n))
+        words = flat["min"][tl * n + c]
+        bits = (words[np.arange(p) // 32] >> (np.arange(p) % 32)) & 1
+        nbr = t.nbrs[c]
+        toward = (nbr >= 0) & (dist[tl, np.maximum(nbr, 0)]
+                               == dist[tl, c] - 1)
+        np.testing.assert_array_equal(bits.astype(bool), toward)
+
+
+def test_build_tables_auto_layout_threshold(monkeypatch):
+    """"auto" resolves to dense below DENSE_MASK_LIMIT and blocked above
+    it (forced low here so a tiny fabric crosses the line)."""
+    from repro.core import build_tables, mrls
+    from repro.core import routing as routing_mod
+
+    t = mrls(14, u=3, d=3, seed=0)
+    assert build_tables(t).mask_layout == "dense"
+    monkeypatch.setattr(routing_mod, "DENSE_MASK_LIMIT", 64)
+    assert build_tables(t).mask_layout == "blocked"
+    with pytest.raises(ValueError, match="mask layout"):
+        build_tables(t, masks="sparse")

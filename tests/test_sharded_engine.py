@@ -1,0 +1,153 @@
+"""Sharded-vs-single-device engine parity (ISSUE 5).
+
+The contract: sharding is a *placement* decision, never a behaviour
+change.
+
+* ``run_chunk_sharded`` splits the replica batch over the mesh's
+  ``replica`` axis with ``jax.shard_map`` — replicas are independent, so
+  every replica must be **bitwise identical** to the single-device
+  ``run_chunk_batch`` result, and replica 0 (seed 0) must still
+  reproduce the committed seed-engine golden
+  (``tests/golden/engine_parity.json``).
+* ``shard_state`` places a scalar state on the ``switch`` axis and lets
+  GSPMD partition the jitted step — again bitwise.
+
+The in-process tests run on the default 1-device CPU mesh (the shard_map
+code path, trivial partitioning); the subprocess test forces 2 host
+devices (``--xla_force_host_platform_device_count``, which must not leak
+into this process — see conftest) and checks real multi-device splits
+for both axes.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import build_tables, mrls
+from repro.parallel.sharding import Sharder, ShardingRules, make_sim_mesh
+from repro.simulator.engine import SimConfig, Simulator, Traffic
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "engine_parity.json")
+    .read_text())
+
+
+@pytest.fixture(scope="module")
+def tables():
+    # blocked layout on purpose: the sharded path and the streamed tables
+    # are the two halves of the extreme-scale story
+    return build_tables(mrls(**GOLDEN["fabric"]), masks="blocked")
+
+
+def test_sim_sharder_profile_resolves_replica_axis():
+    sh = Sharder.for_simulator()
+    assert sh.rules.replica == "replica" and sh.rules.switch is None
+    assert sh.pspec(("replica", None))[0] == "replica"
+    sw = Sharder.for_simulator(axis="switch")
+    assert sw.rules.switch == "switch" and sw.rules.replica is None
+    # the model-side logical names resolve to replicated, not an error
+    assert sh.pspec(("fsdp", "tp")) == sh.pspec((None, None))
+
+
+def test_sharded_chunk_bitwise_equals_batch(tables):
+    import jax
+    tr = Traffic("uniform", load=0.7)
+    sh = Sharder.for_simulator()
+    with Simulator(tables, SimConfig(policy="polarized", max_hops=10,
+                                     pool=4096)) as sim:
+        st = sim.make_batch_state(tr, [0, 1])
+        ref = jax.device_get(sim.run_chunk_batch(st, tr, 24))
+        st2 = sim.make_batch_state(tr, [0, 1])
+        got = jax.device_get(sim.run_chunk_sharded(st2, tr, 24, sh))
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k], err_msg=f"state[{k!r}]")
+
+
+def test_sharded_throughput_reproduces_golden(tables):
+    """Replica 0 of a sharded batched run == the committed seed-engine
+    golden — the sharded path re-derives the same numbers the pre-overhaul
+    engine produced."""
+    gp = GOLDEN["policies"]["polarized"]
+    sh = Sharder.for_simulator()
+    with Simulator(tables, SimConfig(policy="polarized", max_hops=10,
+                                     pool=4096)) as sim:
+        r = sim.run_throughput_batch(Traffic("uniform", load=0.7),
+                                     seeds=[0, 1], warm=GOLDEN["warm"],
+                                     measure=GOLDEN["measure"], sharder=sh)
+    assert float(r["throughput"][0]) == gp["throughput"]
+    assert float(r["avg_hops"][0]) == gp["avg_hops"]
+    assert int(r["ejected"][0]) == gp["ejected"]
+    assert int(r["pool_stall"][0]) == gp["pool_stall"]
+
+
+def test_sharded_rejects_bad_inputs(tables):
+    tr = Traffic("uniform", load=0.7)
+    with Simulator(tables, SimConfig(policy="polarized", max_hops=10,
+                                     pool=4096)) as sim:
+        scalar = sim.make_state(tr, 0)
+        sh = Sharder.for_simulator()
+        with pytest.raises(ValueError, match="batched"):
+            sim.run_chunk_sharded(scalar, tr, 4, sh)
+        no_replica = Sharder(make_sim_mesh(axis="switch"),
+                             ShardingRules.for_sim_mesh(
+                                 make_sim_mesh(axis="switch")))
+        batch = sim.make_batch_state(tr, [0, 1])
+        with pytest.raises(ValueError, match="replica"):
+            sim.run_chunk_sharded(batch, tr, 4, no_replica)
+
+
+_TWO_DEVICE_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    import jax
+    from repro.core import build_tables, mrls
+    from repro.parallel.sharding import Sharder
+    from repro.simulator.engine import SimConfig, Simulator, Traffic
+
+    fabric = json.loads(sys.argv[1])
+    assert len(jax.devices()) == 2, jax.devices()
+    tables = build_tables(mrls(**fabric), masks="blocked")
+    tr = Traffic("uniform", load=0.7)
+    with Simulator(tables, SimConfig(policy="polarized", max_hops=10,
+                                     pool=4096)) as sim:
+        st = sim.make_batch_state(tr, [0, 1])
+        ref = jax.device_get(sim.run_chunk_batch(st, tr, 24))
+        sh = Sharder.for_simulator(n_devices=2)
+        st2 = sim.make_batch_state(tr, [0, 1])
+        got = jax.device_get(sim.run_chunk_sharded(st2, tr, 24, sh))
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], got[k], err_msg=k)
+        with np.testing.assert_raises(ValueError):   # 3 % 2 != 0
+            sim.run_chunk_sharded(sim.make_batch_state(tr, [0, 1, 2]),
+                                  tr, 4, sh)
+        # switch-axis GSPMD placement, scalar state
+        sw = Sharder.for_simulator(n_devices=2, axis="switch")
+        s1 = sim.shard_state(sim.make_state(tr, 0), sw)
+        s1 = jax.device_get(sim.run_chunk(s1, tr, 24))
+        s2 = jax.device_get(sim.run_chunk(sim.make_state(tr, 0), tr, 24))
+        for k in s2:
+            np.testing.assert_array_equal(s2[k], s1[k], err_msg=k)
+    print("TWO_DEVICE_PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_two_devices_bitwise_subprocess():
+    """Real 2-way splits for both axes (forced host devices), bitwise."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(pathlib.Path(__file__).resolve().parents[1] / "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run(
+        [sys.executable, "-c", _TWO_DEVICE_SCRIPT,
+         json.dumps(GOLDEN["fabric"])],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "TWO_DEVICE_PARITY_OK" in out.stdout

@@ -35,6 +35,7 @@ def test_saturation_below_capacity_limit(tiny):
     assert 0.45 < r["throughput"] <= 0.90   # Θ = 0.867 for this instance
 
 
+@pytest.mark.slow
 def test_polarized_beats_minimal_under_rsp():
     t = oft(5)
     tb = build_tables(t)
@@ -56,6 +57,7 @@ def test_all2all_completes(tiny):
     assert r["slots"] >= rounds          # at least one slot per round
 
 
+@pytest.mark.slow
 def test_rabenseifner_phases_on_sim():
     t = mrls(14, u=3, d=3, seed=0)
     sim = Simulator(build_tables(t), SimConfig(policy="polarized",
@@ -144,6 +146,7 @@ def test_completion_slot_is_exact_not_chunk_granular(tiny):
     assert r["slots"] <= old_slots < r["slots"] + chunk
 
 
+@pytest.mark.slow
 def test_batched_state_matches_scalar_runs(tiny):
     tr = Traffic("uniform", load=0.5)
     seeds = [0, 1, 2, 3]

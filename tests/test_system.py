@@ -16,6 +16,7 @@ from repro.optim.adamw import AdamWConfig, warmup_cosine
 from repro.parallel.sharding import Sharder
 
 
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path, mesh, sharder):
     """~50 steps on the structured synthetic stream must reduce loss."""
     cfg = reduced(REGISTRY["qwen3-1.7b"])

@@ -43,6 +43,7 @@ def test_fat_tree_full():
     assert abs(m.cost_switches - 0.139) < 1e-3
 
 
+@pytest.mark.slow
 def test_fat_tree_depopulated_100k():
     t = fat_tree(36, 3, a1=18)           # 50% populated 4-level FT
     m = exact_metrics(t)
