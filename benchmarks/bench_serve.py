@@ -1,0 +1,152 @@
+"""Open-loop serving-source overhead gate + committed SLO sweeps.
+
+Two lanes, each in its own subprocess (clean cold-start wall clock, same
+method as ``bench_collective.py``):
+
+* ``bernoulli`` — closed-loop baseline: ``run_throughput`` over a
+  uniform Bernoulli ``Traffic`` at the same load and slot count.
+* ``arrival``   — the open-loop serving source: ``run_serving`` over
+  ``Traffic("arrival", process="poisson")`` — per-endpoint request FIFOs,
+  birth-slot latency, offered/delivered accounting.
+
+Each child runs its driver once untimed (paying every jit compile) and
+then reports the best of three timed runs, so the gated figure is
+steady-state execution.  The gate is ``ratio = bernoulli_s / arrival_s`` — the arrival
+source's slots/sec relative to plain Bernoulli injection on the same
+fabric and machine.  Both lanes run on one host, so the ratio is
+insensitive to CI host speed; ``--check BASELINE.json`` exits non-zero
+if it regresses more than 20% below the committed baseline (i.e. the
+serving source got disproportionately slower than the engine itself).
+
+``--out`` merges the record into ``BENCH_serve.json`` under
+``overhead.<fabric>``, preserving the committed ``sweeps`` section — the
+MRLS-vs-Fat-Tree >= 1k-endpoint load-latency SLO curves produced by
+``python -m repro.api serve-sweep examples/specs/serve_1k.json``
+(``--attach-sweeps slo.json`` refreshes them from that command's
+``--out`` file).
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+FABRICS = {
+    # name -> mrls builder kwargs
+    "tiny": {"n_leaves": 14, "u": 3, "d": 3, "seed": 0},
+    "mrls1008": {"n_leaves": 168, "u": 6, "d": 6, "seed": 1},
+}
+LOAD = 0.3
+WARM, MEASURE = 200, 4000
+REGRESSION_TOLERANCE = 0.20
+
+
+def _sim(fabric: str):
+    from repro.core import build_tables, mrls
+    from repro.simulator.engine import Simulator, SimConfig
+    tables = build_tables(mrls(**FABRICS[fabric]))
+    return Simulator(tables, SimConfig(policy="polarized", max_hops=8,
+                                       pool=4096))
+
+
+def phase_bernoulli(sim) -> dict:
+    from repro.simulator.engine import Traffic
+    r = sim.run_throughput(Traffic("uniform", load=LOAD), warm=WARM,
+                           measure=MEASURE, seed=0)
+    return {"throughput": float(r["throughput"])}
+
+
+def phase_arrival(sim) -> dict:
+    from repro.simulator.engine import Traffic
+    r = sim.run_serving(Traffic("arrival", process="poisson", load=LOAD),
+                        warm=WARM, measure=MEASURE, seed=0)
+    return {"offered": float(r["offered"]),
+            "delivered": float(r["delivered"])}
+
+
+PHASES = {"bernoulli": phase_bernoulli, "arrival": phase_arrival}
+
+
+def _child(phase: str, fabric: str):
+    sim = _sim(fabric)
+    t0 = time.perf_counter()
+    PHASES[phase](sim)                       # pays tracing + compile
+    compile_t = time.perf_counter() - t0
+    best, out = None, None
+    for _ in range(3):                       # steady-state, cache-hot
+        t0 = time.perf_counter()
+        out = PHASES[phase](sim)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    print(json.dumps({"t": best, "compile_t": compile_t, **out}))
+
+
+def _spawn(phase: str, fabric: str) -> dict:
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()),
+         "--phase", phase, "--fabric", fabric],
+        check=True, capture_output=True, text=True, cwd=str(_ROOT))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(fabric: str, out_path, check_path, sweeps_path):
+    from benchmarks.common import emit
+    bern = _spawn("bernoulli", fabric)
+    arr = _spawn("arrival", fabric)
+    ratio = bern["t"] / arr["t"]
+    record = {"load": LOAD, "slots": WARM + MEASURE,
+              "bernoulli_s": bern["t"], "arrival_s": arr["t"],
+              "bernoulli_compile_s": bern["compile_t"],
+              "arrival_compile_s": arr["compile_t"],
+              "ratio": ratio,
+              "offered": arr["offered"], "delivered": arr["delivered"]}
+    emit(f"bench_serve.{fabric}.bernoulli", bern["t"] * 1e6,
+         f"tput={bern['throughput']:.3f}")
+    emit(f"bench_serve.{fabric}.arrival", arr["t"] * 1e6,
+         f"offered={arr['offered']:.3f} delivered={arr['delivered']:.3f}")
+    emit(f"bench_serve.{fabric}.ratio", 0.0, f"{ratio:.2f}x of bernoulli")
+
+    if out_path:
+        doc = {}
+        p = pathlib.Path(out_path)
+        if p.exists():
+            doc = json.loads(p.read_text())
+        doc.setdefault("overhead", {})[fabric] = record
+        if sweeps_path:
+            doc["sweeps"] = json.loads(pathlib.Path(sweeps_path).read_text())
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {p}")
+
+    if check_path:
+        base = json.loads(pathlib.Path(check_path).read_text())
+        base = base.get("overhead", {}).get(fabric)
+        if base is None:
+            print(f"no committed baseline for fabric {fabric!r}; skipping "
+                  "regression check")
+        else:
+            ref = base["ratio"]
+            floor = (1 - REGRESSION_TOLERANCE) * ref
+            status = "OK" if ratio >= floor else "REGRESSION"
+            print(f"regression check [{status}]: ratio={ratio:.2f}x vs "
+                  f"committed {ref:.2f}x (floor {floor:.2f}x)")
+            if ratio < floor:
+                sys.exit(1)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+
+    def _opt(flag, default):
+        return argv[argv.index(flag) + 1] if flag in argv else default
+    _fabric = _opt("--fabric", "tiny")
+    _phase = _opt("--phase", None)
+    if _phase:
+        _child(_phase, _fabric)
+    else:
+        main(_fabric, _opt("--out", None), _opt("--check", None),
+             _opt("--attach-sweeps", None))

@@ -28,6 +28,10 @@ if [ "$LANE" = "pr" ]; then
     python -m repro.api estimate examples/specs/tiny_mrls_a2a.json \
         --out artifacts/tiny_estimate.json
 
+    echo "== smoke: open-loop serving sweep (tiny SLO curve + LM bridge) =="
+    python -m repro.api serve-sweep examples/specs/tiny_serving.json \
+        --out artifacts/tiny_serving_slo.json
+
     echo "CI OK (pr lane)"
     exit 0
 elif [ "$LANE" != "full" ]; then
@@ -70,6 +74,18 @@ echo "== bench: collective host-loop vs device-resident program =="
 python benchmarks/bench_collective.py --fabric tiny \
     --out artifacts/BENCH_collective.json \
     --check benchmarks/BENCH_collective.json
+
+echo "== smoke: open-loop serving sweep (tiny SLO curve + LM bridge) =="
+python -m repro.api serve-sweep examples/specs/tiny_serving.json \
+    --out artifacts/tiny_serving_slo.json
+
+echo "== bench: open-loop serving source vs Bernoulli baseline =="
+# emits artifacts/BENCH_serve.json and fails if the arrival source's
+# slots/sec ratio to plain Bernoulli injection regresses >20% against
+# the committed benchmarks/BENCH_serve.json baseline (both lanes timed
+# on one host, so the gate is host-speed independent)
+python benchmarks/bench_serve.py --fabric tiny \
+    --out artifacts/BENCH_serve.json --check benchmarks/BENCH_serve.json
 
 echo "== bench: extreme-scale headline sweep (tiny points) =="
 # emits artifacts/BENCH_scale.json and fails if the windowed-program /

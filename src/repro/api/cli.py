@@ -10,6 +10,11 @@ Commands:
 * ``sweep <spec.json> [--replicas R] [--out results.json]`` — spec file
   holds ``{"base": <experiment>, "axes": {"workload.load": [...], ...}}``;
   a seed-only axis is folded into one batched run per remaining grid point.
+* ``serve-sweep <spec.json> [--out slo.json]`` — spec file holds one
+  :class:`repro.serving.ServingSpec` object (``{"serving": {...}}`` or
+  ``{"servings": [...]}``, bare object accepted); runs the open-loop
+  load ladder and prints the p50/p99/p999 SLO curve plus the saturation
+  knee per spec.  ``--out`` writes the full SLO records.
 * ``estimate <spec.json> [--out est.json]`` — price every experiment's
   memory footprint (routing tables, per-replica state, transients) via
   :func:`repro.api.estimate_memory` *without* running anything — the
@@ -33,6 +38,9 @@ from .runner import Result, run_all
 from .registry import topology_families, workload_patterns
 from .specs import Experiment
 from .sweep import sweep
+# registers the lm_prefill/lm_decode/lm_moe bridge patterns, so specs
+# naming them load from any CLI entry point
+from .. import serving
 
 __all__ = ["main"]
 
@@ -41,7 +49,12 @@ def _summary(res: Result) -> str:
     bits = [f"{res.name}", f"metric={res.metric}"]
     if res.replica_seeds is not None:
         bits.append(f"replicas={len(res.replica_seeds)}")
-    if res.throughput is not None:
+    if res.offered is not None:
+        bits.append(f"offered={res.offered:.3f}")
+        bits.append(f"delivered={res.throughput:.3f}")
+        if res.dropped:
+            bits.append(f"dropped={res.dropped:g}")
+    elif res.throughput is not None:
         bits.append(f"throughput={res.throughput:.3f}")
         bits.append(f"avg_hops={res.avg_hops:.2f}")
     if res.latency is not None:
@@ -89,6 +102,45 @@ def _cmd_sweep(args) -> int:
         base = base.override("replicas", args.replicas)
     results = sweep(base, doc.get("axes", {}))
     _emit(results, args.out)
+    return 0
+
+
+def _fmt_q(v) -> str:
+    return "-" if v is None else f"{v:g}"
+
+
+def _cmd_serve_sweep(args) -> int:
+    doc = _load(args.spec)
+    if "servings" in doc:
+        raw = doc["servings"]
+    elif "serving" in doc:
+        raw = [doc["serving"]]
+    else:
+        raw = [doc]
+    specs = [serving.ServingSpec.from_dict(d) for d in raw]
+    records = serving.serve_sweep_many(specs)
+    for rec in records:
+        print(f"{rec['name']}  process={rec['spec']['process']}  "
+              f"loads={len(rec['points'])}")
+        for p in rec["points"]:
+            print(f"  load={p['load']:g}  offered={p['offered']:.3f}  "
+                  f"delivered={p['delivered']:.3f}  "
+                  f"p50={_fmt_q(p.get('p50'))}  p99={_fmt_q(p.get('p99'))}  "
+                  f"p999={_fmt_q(p.get('p999'))}  dropped={p['dropped']:g}")
+        sat = rec["saturation"]
+        print("  saturation: " + (
+            f"load={sat['load']:g} (delivered/offered={sat['ratio']:.3f})"
+            if sat else "none within swept loads"))
+        req = rec.get("request")
+        if req:
+            print(f"  request: {req['model']}/{req['phase']} -> "
+                  f"{req['pattern']} ranks={req['shape']['ranks']} "
+                  f"packets={req['shape']['packets']} "
+                  f"slots={req['slots']} completed={req['completed']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {len(records)} SLO record(s) to {args.out}")
     return 0
 
 
@@ -149,6 +201,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_sweep.add_argument("--replicas", type=int, default=None,
                          help="override the base experiment's replicas (>= 1)")
     p_sweep.set_defaults(fn=_cmd_sweep)
+
+    p_serve = sub.add_parser(
+        "serve-sweep", help="run open-loop serving SLO sweep spec(s)")
+    p_serve.add_argument("spec", help="path to the ServingSpec JSON file")
+    p_serve.add_argument("--out", help="write full SLO JSON records here")
+    p_serve.set_defaults(fn=_cmd_serve_sweep)
 
     p_est = sub.add_parser(
         "estimate", help="estimate memory for experiment spec(s), no run")

@@ -62,10 +62,15 @@ class Result:
 
     Only the fields relevant to ``metric`` are populated; the rest stay
     ``None``.  ``latency`` maps percentile labels (``p50``/``p99``/
-    ``p9999``) to slot counts — uniformly ``float`` (``None`` when the
-    measurement window ejected nothing), never a mix of int and float;
-    ``phase_slots`` holds per-phase completion slots for collectives with
-    a phase schedule (allreduce).
+    ``p999``/``p9999``) to slot counts — uniformly ``float`` (``None``
+    when the measurement window ejected nothing), never a mix of int and
+    float; ``phase_slots`` holds per-phase completion slots for
+    collectives with a phase schedule (allreduce).  The ``serving``
+    metric populates ``throughput`` (delivered), ``offered`` (accepted +
+    dropped arrivals, packets/slot/endpoint), ``dropped`` (packets the
+    full arrival FIFOs rejected in the window), ``pool_stall``, and
+    ``latency`` — the open loop means ``throughput`` may fall below
+    ``offered``.
 
     For a batched run (``experiment.replicas > 1``) the scalar metric
     fields hold the across-replica *mean* (``completed`` is the AND), and
@@ -81,6 +86,8 @@ class Result:
     avg_hops: Optional[float] = None
     ejected: Optional[float] = None
     pool_stall: Optional[float] = None
+    offered: Optional[float] = None
+    dropped: Optional[float] = None
     latency: Optional[Mapping[str, float]] = None
     slots: Optional[float] = None
     completed: Optional[bool] = None
@@ -203,13 +210,36 @@ def open_simulator(network: NetworkSpec, route: RouteSpec = RouteSpec()):
 # execution
 # ---------------------------------------------------------------------- #
 def _to_traffic(exp: Experiment) -> Traffic:
+    from ..workloads.patterns import check_pattern
     w = exp.workload
+    if check_pattern(w.pattern) == "arrival":
+        # arrival families reach the engine as Traffic("arrival") with the
+        # process name in ``process`` — never by family name
+        return Traffic("arrival", process=w.pattern, load=w.load,
+                       pareto_alpha=w.pareto_alpha,
+                       pareto_cap=w.pareto_cap,
+                       diurnal_amp=w.diurnal_amp,
+                       diurnal_period=w.diurnal_period,
+                       arr_depth=w.arr_depth)
     return Traffic(pattern=w.pattern, load=w.load, rounds=w.rounds,
                    elephant_frac=w.elephant_frac,
                    elephant_size=w.elephant_size,
                    shift=w.shift, hot_frac=w.hot_frac,
                    hot_count=w.hot_count, burst_len=w.burst_len,
                    burst_load=w.burst_load)
+
+
+# Result latency labels -> engine percentile keys (p999 is the serving
+# SLO tail added alongside the coarse ladder)
+_LATENCY_KEYS = (("p50", "p0.5"), ("p99", "p0.99"), ("p999", "p0.999"),
+                 ("p9999", "p0.9999"))
+
+
+def _nan_none(v) -> Optional[float]:
+    """NaN (empty measurement window) -> None so Results stay strict-JSON
+    and round-trip losslessly."""
+    v = float(v)
+    return None if np.isnan(v) else v
 
 
 def _is_program(exp: Experiment) -> bool:
@@ -298,14 +328,22 @@ def _batched_metrics(sim: Simulator, exp: Experiment, seeds) -> Tuple[str, dict]
     if metric == "latency":
         r = sim.run_latency_batch(traffic, seeds, warm=exp.warm,
                                   measure=exp.measure)
-
-        def _p(v):
-            return None if np.isnan(v) else float(v)
         return metric, {
-            "p50": tuple(_p(v) for v in r["p0.5"]),
-            "p99": tuple(_p(v) for v in r["p0.99"]),
-            "p9999": tuple(_p(v) for v in r["p0.9999"]),
+            lbl: tuple(_nan_none(v) for v in r[k])
+            for lbl, k in _LATENCY_KEYS
         }
+    if metric == "serving":
+        r = sim.run_serving_batch(traffic, seeds, warm=exp.warm,
+                                  measure=exp.measure)
+        per = {
+            "throughput": tuple(float(x) for x in r["delivered"]),
+            "offered": tuple(float(x) for x in r["offered"]),
+            "dropped": tuple(int(x) for x in r["dropped"]),
+            "pool_stall": tuple(int(x) for x in r["pool_stall"]),
+        }
+        per.update({lbl: tuple(_nan_none(v) for v in r[k])
+                    for lbl, k in _LATENCY_KEYS})
+        return metric, per
     if metric == "completion":
         if w.pattern != "all2all":
             raise ValueError(
@@ -338,8 +376,11 @@ def _batched_result(exp: Experiment, seeds, metric: str, per: dict) -> Result:
         kw = dict(throughput=mean("throughput"), avg_hops=mean("avg_hops"),
                   ejected=mean("ejected"), pool_stall=mean("pool_stall"))
     elif metric == "latency":
-        kw = dict(latency={"p50": mean("p50"), "p99": mean("p99"),
-                           "p9999": mean("p9999")})
+        kw = dict(latency={lbl: mean(lbl) for lbl, _ in _LATENCY_KEYS})
+    elif metric == "serving":
+        kw = dict(throughput=mean("throughput"), offered=mean("offered"),
+                  dropped=mean("dropped"), pool_stall=mean("pool_stall"),
+                  latency={lbl: mean(lbl) for lbl, _ in _LATENCY_KEYS})
     else:
         kw = dict(slots=mean("slots"),
                   completed=bool(all(per["completed"])),
@@ -366,8 +407,15 @@ def _unfold_batch(group, metric: str, per: dict) -> list:
                       ejected=per["ejected"][i],
                       pool_stall=per["pool_stall"][i])
         elif metric == "latency":
-            kw = dict(latency={"p50": per["p50"][i], "p99": per["p99"][i],
-                               "p9999": per["p9999"][i]})
+            kw = dict(latency={lbl: per[lbl][i]
+                               for lbl, _ in _LATENCY_KEYS})
+        elif metric == "serving":
+            kw = dict(throughput=per["throughput"][i],
+                      offered=per["offered"][i],
+                      dropped=per["dropped"][i],
+                      pool_stall=per["pool_stall"][i],
+                      latency={lbl: per[lbl][i]
+                               for lbl, _ in _LATENCY_KEYS})
         else:
             kw = dict(slots=per["slots"][i], completed=per["completed"][i],
                       pool_stall=per["pool_stall"][i])
@@ -481,11 +529,17 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
                             seed=exp.seed)
         # zero ejections in the window -> NaN percentiles; map to None so
         # the Result stays strict-JSON and round-trips losslessly
-        def _p(v):
-            return None if isinstance(v, float) and np.isnan(v) else float(v)
-        lat = {"p50": _p(r["p0.5"]), "p99": _p(r["p0.99"]),
-               "p9999": _p(r["p0.9999"])}
+        lat = {lbl: _nan_none(r[k]) for lbl, k in _LATENCY_KEYS}
         return Result(experiment=exp, metric=metric, latency=lat)
+    if metric == "serving":
+        r = sim.run_serving(traffic, warm=exp.warm, measure=exp.measure,
+                            seed=exp.seed)
+        lat = {lbl: _nan_none(r[k]) for lbl, k in _LATENCY_KEYS}
+        return Result(experiment=exp, metric=metric,
+                      throughput=float(r["delivered"]),
+                      offered=float(r["offered"]),
+                      dropped=int(r["dropped"]),
+                      pool_stall=int(r["pool_stall"]), latency=lat)
     if metric == "completion":
         if exp.workload.pattern != "all2all":
             raise ValueError(

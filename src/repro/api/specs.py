@@ -21,7 +21,8 @@ from typing import Any, Mapping, Optional, Tuple
 # the single pattern-name registry, shared with the engine's ``Traffic``
 # (repro.workloads.patterns) — a typo'd pattern raises the same error in
 # both layers
-from ..workloads.patterns import (BERNOULLI_PATTERNS, COLLECTIVE_PATTERNS,
+from ..workloads.patterns import (ARRIVAL_PATTERNS, BERNOULLI_PATTERNS,
+                                  COLLECTIVE_PATTERNS, check_arrival,
                                   check_pattern, check_schedule)
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "RouteSpec",
     "WorkloadSpec",
     "Experiment",
+    "ARRIVAL_PATTERNS",
     "BERNOULLI_PATTERNS",
     "COLLECTIVE_PATTERNS",
 ]
@@ -131,10 +133,14 @@ class WorkloadSpec:
     bursty``, driven by ``load``) or a collective (``all2all`` with
     ``rounds``; the allreduce family ``allreduce`` = Rabenseifner,
     ``ring_allreduce``, ``rd_allreduce`` = recursive doubling, over
-    ``ranks`` ranks of ``vec_packets`` packets).  Pattern names are
-    validated against the shared workloads registry
-    (:mod:`repro.workloads.patterns`) — the same registry the engine's
-    ``Traffic`` enforces.
+    ``ranks`` ranks of ``vec_packets`` packets) or an open-loop arrival
+    process (``poisson | pareto | diurnal``, driven by the offered
+    ``load`` with the serving knobs ``pareto_alpha`` / ``pareto_cap`` /
+    ``diurnal_amp`` / ``diurnal_period`` / ``arr_depth`` — measured with
+    the ``serving`` metric, where delivered throughput may fall below
+    offered load).  Pattern names are validated against the shared
+    workloads registry (:mod:`repro.workloads.patterns`) — the same
+    registry the engine's ``Traffic`` enforces.
 
     ``schedule`` picks the collective execution mode: ``""`` (default)
     keeps each pattern's native semantics (allreduce family: ``barrier``
@@ -161,10 +167,23 @@ class WorkloadSpec:
     hot_count: int = 1           # hotspot: number of hot endpoints
     burst_len: float = 8.0       # bursty: mean burst duration (slots)
     burst_load: float = 1.0      # bursty: injection probability in-burst
+    # open-loop arrival (serving) knobs
+    pareto_alpha: float = 1.5    # pareto: bounded-Pareto shape (> 1)
+    pareto_cap: int = 64         # pareto: batch-size cap (packets)
+    diurnal_amp: float = 0.5     # diurnal: relative amplitude [0, 1]
+    diurnal_period: int = 512    # diurnal: modulation period (slots >= 2)
+    arr_depth: int = 8           # per-endpoint pending-batch FIFO depth
 
     def __post_init__(self):
         kind = check_pattern(self.pattern)
         check_schedule(self.schedule, self.window)
+        if kind == "arrival":
+            check_arrival(self.pattern, self.load,
+                          pareto_alpha=self.pareto_alpha,
+                          pareto_cap=self.pareto_cap,
+                          diurnal_amp=self.diurnal_amp,
+                          diurnal_period=self.diurnal_period,
+                          arr_depth=self.arr_depth)
         if self.schedule and kind != "collective":
             raise ValueError(
                 f"schedule={self.schedule!r} needs a collective pattern, "
@@ -223,10 +242,12 @@ class Experiment:
     """One runnable scenario: fabric x routing x workload + measurement.
 
     ``metric`` is ``auto`` (Bernoulli patterns -> ``throughput``,
-    collectives -> ``completion``), ``throughput``, ``latency``, or
-    ``completion``.  ``seed`` drives both the traffic permutations and the
-    simulator PRNG stream — sweeping it on a shared simulator does not
-    recompile.
+    collectives -> ``completion``, arrival processes -> ``serving``),
+    ``throughput``, ``latency``, ``completion``, or ``serving`` (offered
+    vs delivered rate, source drops, and birth-slot latency percentiles
+    for the open-loop arrival patterns).  ``seed`` drives both the
+    traffic permutations and the simulator PRNG stream — sweeping it on a
+    shared simulator does not recompile.
 
     ``replicas`` makes replication a compiled axis: R > 1 runs seeds
     ``seed .. seed+R-1`` through one ``jax.vmap``-batched executable (one
@@ -247,7 +268,8 @@ class Experiment:
     max_slots: int = 60_000
 
     def __post_init__(self):
-        if self.metric not in ("auto", "throughput", "latency", "completion"):
+        if self.metric not in ("auto", "throughput", "latency", "completion",
+                               "serving"):
             raise ValueError(f"unknown metric {self.metric!r}")
         if self.replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {self.replicas}")
@@ -258,8 +280,11 @@ class Experiment:
             return self.metric
         # registry kind, not a static tuple: collectives registered after
         # import (register_program_builder) resolve to completion too
-        if check_pattern(self.workload.pattern) == "collective":
+        kind = check_pattern(self.workload.pattern)
+        if kind == "collective":
             return "completion"
+        if kind == "arrival":
+            return "serving"
         return "throughput"
 
     def label(self) -> str:

@@ -76,11 +76,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.routing import RoutingTables
-from ..workloads.patterns import BERNOULLI_PATTERNS, check_pattern
+from ..workloads.patterns import (ARRIVAL_PATTERNS, BERNOULLI_PATTERNS,
+                                  bounded_pareto_mean, check_arrival,
+                                  check_pattern)
 
 BIG = jnp.float32(1e9)
 
 BACKENDS = ("xla", "pallas")
+
+# percentile ladder of the latency-family drivers: median, p99, and the
+# serving-SLO tails (p999 / p9999)
+LATENCY_QS = (0.5, 0.99, 0.999, 0.9999)
 
 
 @contextlib.contextmanager
@@ -131,6 +137,20 @@ class Traffic:
       ``0..hot_count-1``), ``bursty`` (on-off Markov modulation with mean
       burst length ``burst_len`` slots and in-burst intensity
       ``burst_load``; long-run offered load stays ``load``).
+    * ``arrival``: open-loop serving source.  ``process`` picks the
+      arrival generator (``poisson`` — Bernoulli(load) single-packet
+      arrivals; ``pareto`` — bounded-Pareto batch sizes (shape
+      ``pareto_alpha``, cap ``pareto_cap``) with the arrival probability
+      calibrated so the long-run offered load stays ``load``; ``diurnal``
+      — sinusoidal rate modulation with relative amplitude
+      ``diurnal_amp`` and period ``diurnal_period`` slots).  Each endpoint
+      holds an ``arr_depth``-deep FIFO of pending request batches;
+      arrivals that find it full are dropped (``arr_drop``) instead of
+      back-pressuring the source — that open loop is what distinguishes
+      serving traffic from the Bernoulli families, whose idle-endpoint
+      gating silently caps offered load at service capacity.  Packet
+      latency is measured from the batch's *arrival* slot (``msg_birth``),
+      so source queueing shows up in the histogram.
     * ``all2all``: each endpoint sends ``rounds`` single-packet messages to
       (e + r + 1) mod S, free-running (no round synchronization).
     * ``phase``: each endpoint sends ``phase_packets`` packets to
@@ -155,6 +175,13 @@ class Traffic:
     hot_count: int = 1           # hotspot: number of hot endpoints
     burst_len: float = 8.0       # bursty: mean ON duration (slots)
     burst_load: float = 1.0      # bursty: injection probability while ON
+    # open-loop arrival source ("arrival" pattern) knobs
+    process: str = "poisson"     # poisson | pareto | diurnal
+    pareto_alpha: float = 1.5    # bounded-Pareto shape (> 1)
+    pareto_cap: int = 64         # bounded-Pareto batch-size cap (packets)
+    diurnal_amp: float = 0.5     # relative rate-modulation amplitude [0,1]
+    diurnal_period: int = 512    # modulation period (slots, >= 2)
+    arr_depth: int = 8           # per-endpoint pending-batch FIFO depth
     # compiled workload program (schedule shape; arrays live in the state)
     n_phases: int = 0
     schedule: str = "barrier"    # "barrier" | "window"
@@ -162,6 +189,9 @@ class Traffic:
 
     def __post_init__(self):
         check_pattern(self.pattern, engine=True)
+        if self.pattern == "arrival" and self.process not in ARRIVAL_PATTERNS:
+            raise ValueError(f"unknown arrival process {self.process!r}; "
+                             f"expected one of {ARRIVAL_PATTERNS}")
 
 
 class Simulator:
@@ -445,6 +475,69 @@ class Simulator:
             if pat == "mice_elephant":
                 size = jnp.where(jax.random.uniform(k3, (S,)) < traffic.elephant_frac,
                                  traffic.elephant_size, 1)
+        elif pat == "arrival":
+            # open-loop serving source: generate at most one request batch
+            # per endpoint per slot, queue it in the per-endpoint FIFO
+            # (dropping on overflow — the source never back-pressures),
+            # then let idle endpoints pop their head batch.  All of this is
+            # behind a static Python branch: existing patterns trace
+            # exactly as before (parity goldens stay bitwise).
+            proc = traffic.process
+            D = traffic.arr_depth
+            u_arr = jax.random.uniform(k1, (S,))
+            if proc == "poisson":
+                arrive = u_arr < traffic.load
+                batch = jnp.ones((S,), jnp.int32)
+            elif proc == "pareto":
+                # bounded-Pareto batch sizes via inverse CDF; the arrival
+                # probability is divided by the exact discrete batch mean
+                # so the long-run offered load calibrates to ``load``
+                alpha = traffic.pareto_alpha
+                cap = traffic.pareto_cap
+                arrive = u_arr < traffic.load / bounded_pareto_mean(alpha,
+                                                                    cap)
+                if cap <= 1:
+                    batch = jnp.ones((S,), jnp.int32)
+                else:
+                    u = jax.random.uniform(k3, (S,))
+                    x = (1.0 - u * (1.0 - float(cap) ** -alpha)) \
+                        ** (-1.0 / alpha)
+                    batch = jnp.clip(jnp.floor(x), 1, cap).astype(jnp.int32)
+            else:  # diurnal — sinusoidal rate modulation around ``load``
+                w = 2.0 * np.pi / traffic.diurnal_period
+                rate = traffic.load * (
+                    1.0 + traffic.diurnal_amp
+                    * jnp.sin(w * st["slot"].astype(jnp.float32)))
+                arrive = u_arr < rate
+                batch = jnp.ones((S,), jnp.int32)
+            room = st["arr_len"] < D
+            push = arrive & room
+            tail = (st["arr_head"] + st["arr_len"]) % D
+            hot = push[:, None] & (jnp.arange(D, dtype=jnp.int32)[None, :]
+                                   == tail[:, None])
+            arr_times = jnp.where(hot, st["slot"], st["arr_times"])
+            arr_sizes = jnp.where(hot, batch[:, None], st["arr_sizes"])
+            arr_len = st["arr_len"] + push.astype(jnp.int32)
+            # pop: idle endpoints start serving their head batch (a batch
+            # arriving this slot may pop immediately — zero source
+            # queueing keeps the latency-1 floor of the local fast path)
+            start = idle & (arr_len > 0)
+            headi = e * D + st["arr_head"]
+            size = jnp.maximum(arr_sizes.reshape(-1)[headi], 1)
+            birth = arr_times.reshape(-1)[headi]
+            dst = jax.random.randint(k2, (S,), 0, S)
+            arrival_updates = {
+                "arr_times": arr_times,
+                "arr_sizes": arr_sizes,
+                "arr_head": jnp.where(start, (st["arr_head"] + 1) % D,
+                                      st["arr_head"]),
+                "arr_len": arr_len - start.astype(jnp.int32),
+                "arrived": st["arrived"]
+                + jnp.where(push, batch, 0).sum(dtype=jnp.int32),
+                "arr_drop": st["arr_drop"]
+                + jnp.where(arrive & ~room, batch, 0).sum(dtype=jnp.int32),
+                "msg_birth": jnp.where(start, birth, st["msg_birth"]),
+            }
         elif pat == "all2all":
             start = idle & (st["prog"] < traffic.rounds)
             dst = (e + st["prog"] + 1) % S
@@ -523,13 +616,18 @@ class Simulator:
         st = dict(st)
         if burst_new is not None:
             st["burst"] = burst_new
+        if pat == "arrival":
+            st.update(arrival_updates)
         st["fl_head"] = (st["fl_head"] + n_pop) % self.pool
         st["fl_len"] = st["fl_len"] - n_pop
         st["p_sd"] = st["p_sd"].at[widx].set((src_lr << 16) | dst_lr,
                                              mode="drop")
         if self.cfg.policy in ("ugal", "valiant"):
             st["p_mid"] = st["p_mid"].at[widx].set(mid, mode="drop")
-        st["p_bh"] = st["p_bh"].at[widx].set(st["slot"] << 8, mode="drop")
+        # arrival packets are born at their batch's *arrival* slot, so
+        # source queueing shows up in the latency histogram
+        born = st["msg_birth"] if pat == "arrival" else st["slot"]
+        st["p_bh"] = st["p_bh"].at[widx].set(born << 8, mode="drop")
         # push into NIC queue (dense one-hot write — one row per endpoint)
         pos = (st["eq_head"] + st["eq_len"]) % self.QE
         slot_hot = ok[:, None] & (jnp.arange(self.QE, dtype=jnp.int32)[None, :]
@@ -546,7 +644,16 @@ class Simulator:
         st["created"] = st["created"] + ok.sum(dtype=jnp.int32) + n_local
         st["ejected"] = st["ejected"] + n_local
         st["pool_stall"] = st["pool_stall"] + (want_net & ~ok).sum(dtype=jnp.int32)
-        st["lat_hist"] = st["lat_hist"].at[1].add(n_local)
+        if pat == "arrival":
+            # local fast-path deliveries also measure from the batch's
+            # arrival slot, not the fixed 1-slot bin
+            lat_loc = jnp.clip(st["slot"] - st["msg_birth"] + 1, 0,
+                               self.cfg.hist_bins - 1)
+            st["lat_hist"] = st["lat_hist"].at[
+                jnp.where(deliver_local, lat_loc, 0)].add(
+                jnp.where(deliver_local, 1, 0))
+        else:
+            st["lat_hist"] = st["lat_hist"].at[1].add(n_local)
         return st
 
     def _mean_msg(self, t: Traffic) -> float:
@@ -1089,6 +1196,16 @@ class Simulator:
     # ------------------------------------------------------------------ #
     # high-level drivers
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _check_arrival(traffic: Traffic) -> None:
+        # one validator for spec layer and engine (repro.workloads.patterns)
+        check_arrival(traffic.process, traffic.load,
+                      pareto_alpha=traffic.pareto_alpha,
+                      pareto_cap=traffic.pareto_cap,
+                      diurnal_amp=traffic.diurnal_amp,
+                      diurnal_period=traffic.diurnal_period,
+                      arr_depth=traffic.arr_depth)
+
     def make_state(self, traffic: Traffic, seed: int = 0) -> dict:
         if self._closed:
             raise RuntimeError("Simulator is closed")
@@ -1117,6 +1234,8 @@ class Simulator:
                     f"{duty_max:.3f} (even at p_on = 1), so the long-run "
                     "offered load would silently undershoot `load` — "
                     "raise burst_len or burst_load")
+        if traffic.pattern == "arrival":
+            self._check_arrival(traffic)
         rng = np.random.default_rng(seed)
         seed_arrays = {}
         if traffic.pattern == "rep":
@@ -1127,6 +1246,15 @@ class Simulator:
             seed_arrays["burst"] = np.zeros(self.S, np.int32)  # all OFF
         if traffic.pattern == "phase":
             seed_arrays["partner"] = np.zeros(self.S, np.int32)  # set by caller
+        if traffic.pattern == "arrival":
+            D = traffic.arr_depth
+            seed_arrays["arr_times"] = np.zeros((self.S, D), np.int32)
+            seed_arrays["arr_sizes"] = np.zeros((self.S, D), np.int32)
+            seed_arrays["arr_head"] = np.zeros(self.S, np.int32)
+            seed_arrays["arr_len"] = np.zeros(self.S, np.int32)
+            seed_arrays["msg_birth"] = np.zeros(self.S, np.int32)
+            seed_arrays["arrived"] = np.zeros((), np.int32)
+            seed_arrays["arr_drop"] = np.zeros((), np.int32)
         st = self.init_state(traffic, seed_arrays)
         if seed:  # thread the run seed into the sim PRNG (seed=0: legacy key)
             # fold_in, not key arithmetic: PRNGKey(cfg.seed + (seed << 16))
@@ -1154,6 +1282,21 @@ class Simulator:
         buf = np.asarray(st["fl_buf"])
         head, n = int(st["fl_head"]), int(st["fl_len"])
         return buf[(head + np.arange(n)) % buf.shape[0]]
+
+    @staticmethod
+    def arrival_backlog(st) -> int:
+        """Host-side sum of packets still queued in the arrival FIFOs of a
+        scalar ``Traffic("arrival")`` state (the live ring windows).  With
+        ``sum(msg_rem)`` (popped but not yet injected) this closes the
+        open-loop conservation ledger:
+        ``arrived == backlog + sum(msg_rem) + created``."""
+        sizes = np.asarray(st["arr_sizes"])
+        head = np.asarray(st["arr_head"])
+        ln = np.asarray(st["arr_len"])
+        D = sizes.shape[1]
+        idx = (head[:, None] + np.arange(D)[None, :]) % D
+        live = np.arange(D)[None, :] < ln[:, None]
+        return int(np.take_along_axis(sizes, idx, 1)[live].sum())
 
     @staticmethod
     def _counter_snapshot(st) -> dict:
@@ -1218,7 +1361,7 @@ class Simulator:
         base = st["lat_hist"] + 0            # fresh buffer; st is donated
         st = self.run_chunk(st, traffic, measure)
         hist = np.asarray(jax.device_get(st["lat_hist"] - base))
-        return {"hist": hist, **percentiles(hist, (0.5, 0.99, 0.9999))}
+        return {"hist": hist, **percentiles(hist, LATENCY_QS)}
 
     def run_latency_batch(self, traffic: Traffic, seeds,
                           warm: int = 200, measure: int = 600) -> dict:
@@ -1230,11 +1373,80 @@ class Simulator:
         base = st["lat_hist"] + 0
         st = self.run_chunk_batch(st, traffic, measure)
         hist = np.asarray(jax.device_get(st["lat_hist"] - base))  # [R, bins]
-        per = [percentiles(row, (0.5, 0.99, 0.9999)) for row in hist]
+        per = [percentiles(row, LATENCY_QS) for row in hist]
         out = {"hist": hist}
-        for k in ("p0.5", "p0.99", "p0.9999"):
+        for q in LATENCY_QS:
+            k = f"p{q}"
             out[k] = np.asarray([p[k] for p in per])
         return out
+
+    # ------------------------------------------------------------------ #
+    # open-loop serving drivers (Traffic("arrival"))
+    # ------------------------------------------------------------------ #
+    def _serving_snapshot(self, st) -> dict:
+        # fresh buffers (`+ 0`): the state is about to be donated
+        return {k: st[k] + 0 for k in ("lat_hist", "ejected", "arrived",
+                                       "arr_drop", "pool_stall")}
+
+    @staticmethod
+    def _serving_metrics(m: dict, S: int, measure: int) -> dict:
+        """Window deltas -> serving record (offered/delivered in
+        packets/slot/endpoint, latency percentiles incl. the SLO tail)."""
+        hist = np.asarray(m["lat_hist"])
+        delivered = np.asarray(m["ejected"], np.int64)
+        accepted = np.asarray(m["arrived"], np.int64)
+        dropped = np.asarray(m["arr_drop"], np.int64)
+        denom = float(S * measure)
+        out = {
+            "hist": hist,
+            "offered": (accepted + dropped) / denom,
+            "delivered": delivered / denom,
+            "dropped": dropped,
+            "pool_stall": np.asarray(m["pool_stall"], np.int64),
+        }
+        if hist.ndim == 1:
+            out.update(percentiles(hist, LATENCY_QS))
+            out["offered"] = float(out["offered"])
+            out["delivered"] = float(out["delivered"])
+            out["dropped"] = int(out["dropped"])
+            out["pool_stall"] = int(out["pool_stall"])
+        else:
+            per = [percentiles(row, LATENCY_QS) for row in hist]
+            for q in LATENCY_QS:
+                k = f"p{q}"
+                out[k] = np.asarray([p[k] for p in per])
+        return out
+
+    def run_serving(self, traffic: Traffic, warm: int = 200,
+                    measure: int = 600, seed: int = 0) -> dict:
+        """Open-loop load-latency measurement: warm the arrival source,
+        then measure offered vs delivered rate, source drops, and the
+        latency histogram (birth-slot based, so source queueing counts)
+        over ``measure`` slots.  One device fetch, like the other
+        drivers."""
+        if traffic.pattern != "arrival":
+            raise ValueError(f"run_serving needs Traffic('arrival'), got "
+                             f"{traffic.pattern!r}")
+        st = self.make_state(traffic, seed)
+        st = self.run_chunk(st, traffic, warm)
+        base = self._serving_snapshot(st)
+        st = self.run_chunk(st, traffic, measure)
+        m = jax.device_get({k: st[k] - base[k] for k in base})
+        return {**self._serving_metrics(m, self.S, measure), "state": st}
+
+    def run_serving_batch(self, traffic: Traffic, seeds, warm: int = 200,
+                          measure: int = 600) -> dict:
+        """Batched ``run_serving``: per-replica ``[R]`` arrays (percentile
+        entries NaN where a replica delivered nothing in the window)."""
+        if traffic.pattern != "arrival":
+            raise ValueError(f"run_serving needs Traffic('arrival'), got "
+                             f"{traffic.pattern!r}")
+        st = self.make_batch_state(traffic, seeds)
+        st = self.run_chunk_batch(st, traffic, warm)
+        base = self._serving_snapshot(st)
+        st = self.run_chunk_batch(st, traffic, measure)
+        m = jax.device_get({k: st[k] - base[k] for k in base})
+        return {**self._serving_metrics(m, self.S, measure), "state": st}
 
     def run_completion(self, traffic: Traffic, expected: int,
                        chunk: int = 128, max_slots: int = 100_000,

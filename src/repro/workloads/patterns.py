@@ -14,21 +14,34 @@ Kinds:
 * ``collective`` — finite programs measured to completion.  All but the
   legacy free-running ``all2all`` compile to a
   :class:`repro.workloads.WorkloadProgram` and execute device-resident.
-* ``engine``     — raw simulator-level patterns (``phase``, ``program``)
-  that the spec layer reaches only through a collective pattern.
+* ``arrival``    — open-loop serving traffic (``poisson`` / ``pareto`` /
+  ``diurnal`` arrival processes, driven by an offered ``load``): the
+  injection source queues request batches per endpoint instead of
+  regenerating Bernoulli draws, so latency includes source queueing and
+  delivered throughput can fall below offered load.  Measured with the
+  ``serving`` metric.  The engine reaches these as
+  ``Traffic("arrival", process=<name>)``, never by family name.
+* ``engine``     — raw simulator-level patterns (``phase``, ``program``,
+  ``arrival``) that the spec layer reaches only through a collective or
+  arrival pattern.
 """
 from __future__ import annotations
 
 from typing import Mapping
 
+import numpy as np
+
 __all__ = [
     "BERNOULLI_PATTERNS",
     "COLLECTIVE_PATTERNS",
+    "ARRIVAL_PATTERNS",
     "ENGINE_ONLY_PATTERNS",
     "SCHEDULES",
     "pattern_kinds",
     "check_pattern",
     "check_schedule",
+    "check_arrival",
+    "bounded_pareto_mean",
 ]
 
 # open-loop Bernoulli injection (drawn fresh each slot, driven by ``load``)
@@ -37,10 +50,13 @@ BERNOULLI_PATTERNS = ("uniform", "rep", "rsp", "bu", "mice_elephant",
 # finite programs measured to completion
 COLLECTIVE_PATTERNS = ("all2all", "allreduce", "ring_allreduce",
                        "rd_allreduce")
+# open-loop arrival processes (serving traffic; engine pattern "arrival")
+ARRIVAL_PATTERNS = ("poisson", "pareto", "diurnal")
 # engine-level patterns the spec layer never names directly:
 # ``phase``   — one hand-patched partner exchange (legacy host-loop idiom)
 # ``program`` — a compiled multi-phase WorkloadProgram (device scheduler)
-ENGINE_ONLY_PATTERNS = ("phase", "program")
+# ``arrival`` — the open-loop source (process name rides in Traffic.process)
+ENGINE_ONLY_PATTERNS = ("phase", "program", "arrival")
 
 # collective execution schedules ("" = per-pattern default)
 SCHEDULES = ("", "barrier", "window")
@@ -50,6 +66,7 @@ SCHEDULES = ("", "barrier", "window")
 _KINDS = (
     {p: "bernoulli" for p in BERNOULLI_PATTERNS}
     | {p: "collective" for p in COLLECTIVE_PATTERNS}
+    | {p: "arrival" for p in ARRIVAL_PATTERNS}
     | {p: "engine" for p in ENGINE_ONLY_PATTERNS}
 )
 
@@ -65,7 +82,7 @@ def register_pattern(name: str, kind: str = "collective",
     need a program builder (use
     :func:`repro.workloads.programs.register_program_builder`, which calls
     this)."""
-    if kind not in ("bernoulli", "collective", "engine"):
+    if kind not in ("bernoulli", "collective", "arrival", "engine"):
         raise ValueError(f"unknown pattern kind {kind!r}")
     if name in _KINDS and not overwrite:
         raise ValueError(f"pattern {name!r} already registered "
@@ -79,7 +96,7 @@ def _spec_names() -> tuple:
 
 def _engine_names() -> tuple:
     return tuple(sorted(n for n, k in _KINDS.items()
-                        if k != "collective" or n == "all2all"))
+                        if k in ("bernoulli", "engine") or n == "all2all"))
 
 
 def check_pattern(name: str, *, engine: bool = False) -> str:
@@ -88,23 +105,90 @@ def check_pattern(name: str, *, engine: bool = False) -> str:
     ``engine=True`` accepts what the raw simulator ``Traffic`` executes
     (Bernoulli families + ``all2all`` + the engine-only patterns —
     registered collectives reach the engine as compiled
-    ``Traffic("program")`` runs, never by name);
+    ``Traffic("program")`` runs, and arrival families as
+    ``Traffic("arrival", process=<name>)``, never by family name);
     ``engine=False`` accepts what a ``WorkloadSpec`` may declare
-    (Bernoulli + collectives, including registered ones).
+    (Bernoulli + arrival families + collectives, including registered
+    ones).
     """
     kind = _KINDS.get(name)
     ok = (kind == "bernoulli"
           or (engine and (kind == "engine" or name == "all2all"))
-          or (not engine and kind == "collective"))
+          or (not engine and kind in ("collective", "arrival")))
     if not ok:
         known = _engine_names() if engine else _spec_names()
         hint = ""
         if not engine and kind == "engine":
             hint = (" (engine-only pattern: reach it via a collective such "
                     "as pattern='allreduce')")
+        if engine and kind == "arrival":
+            hint = (" (arrival family: the engine runs it as "
+                    f"Traffic('arrival', process={name!r}))")
         raise ValueError(f"unknown pattern {name!r}; expected one of "
                          f"{known}{hint}")
     return kind
+
+
+def bounded_pareto_mean(alpha: float, cap: int) -> float:
+    """Mean of ``floor(X)`` for ``X ~`` bounded Pareto(``alpha``) on
+    ``[1, cap]`` — the exact discrete batch-size mean the arrival source
+    divides the batch-arrival probability by, so the long-run offered
+    load calibrates to the configured rate with no sampling bias."""
+    if cap <= 1:
+        return 1.0
+    k = np.arange(1, cap + 1, dtype=np.float64)
+    cdf = (1.0 - k ** -alpha) / (1.0 - float(cap) ** -alpha)
+    pk = np.diff(np.concatenate([cdf, [1.0]]))     # P(floor(X) = k)
+    return float((np.arange(1, cap + 1) * pk).sum())
+
+
+def check_arrival(process: str, load: float, *, pareto_alpha: float = 1.5,
+                  pareto_cap: int = 64, diurnal_amp: float = 0.5,
+                  diurnal_period: int = 512, arr_depth: int = 8) -> None:
+    """Reject degenerate arrival-process configs loudly (mirrors the
+    hotspot/bursty validation): a silent clamp would make the offered
+    load miscalibrate instead of erroring.  Shared by
+    ``WorkloadSpec`` (spec layer) and the engine's ``make_state``."""
+    if process not in ARRIVAL_PATTERNS:
+        raise ValueError(f"unknown arrival process {process!r}; expected "
+                         f"one of {ARRIVAL_PATTERNS}")
+    if load <= 0:
+        raise ValueError(f"arrival rate (load) must be > 0, got {load}")
+    if arr_depth < 1:
+        raise ValueError(f"arr_depth must be >= 1, got {arr_depth}")
+    if process == "poisson" and load > 1.0:
+        raise ValueError(
+            f"poisson load {load} > 1 packet/slot/endpoint: the slotted "
+            "source generates at most one arrival per endpoint per slot")
+    if process == "pareto":
+        if pareto_alpha <= 1.0:
+            raise ValueError(
+                f"pareto_alpha must be > 1 (alpha <= 1 has no finite "
+                f"unbounded mean to calibrate against), got {pareto_alpha}")
+        if pareto_cap < 1:
+            raise ValueError(f"pareto_cap must be >= 1 packet, got "
+                             f"{pareto_cap}")
+        p_arr = load / bounded_pareto_mean(pareto_alpha, pareto_cap)
+        if p_arr > 1.0:
+            raise ValueError(
+                f"pareto load {load} needs batch-arrival probability "
+                f"{p_arr:.3f} > 1 (mean batch {load / p_arr:.2f} "
+                "packets): unreachable — lower load or raise "
+                "pareto_cap/alpha")
+    if process == "diurnal":
+        if diurnal_period < 2:
+            raise ValueError(
+                f"diurnal_period must be >= 2 slots, got {diurnal_period} "
+                "(a shorter period cannot represent one modulation cycle)")
+        if not 0.0 <= diurnal_amp <= 1.0:
+            raise ValueError(f"diurnal_amp must be in [0, 1], got "
+                             f"{diurnal_amp}")
+        peak = load * (1.0 + diurnal_amp)
+        if peak > 1.0:
+            raise ValueError(
+                f"diurnal peak rate {peak:.3f} > 1 packet/slot/endpoint: "
+                "the slotted source would clip the crest and silently "
+                "undershoot the offered load")
 
 
 def check_schedule(schedule: str, window: int) -> None:

@@ -1,0 +1,340 @@
+"""Open-loop serving traffic: arrival processes, the LM bridge, and the
+SLO sweep layer (``repro.serving``)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import mrls, build_tables
+from repro.simulator.engine import Simulator, SimConfig, Traffic
+from repro.workloads.patterns import (bounded_pareto_mean, check_arrival,
+                                      check_pattern)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    t = mrls(14, u=3, d=3, seed=0)
+    return Simulator(build_tables(t), SimConfig(policy="polarized",
+                                                max_hops=10, pool=4096))
+
+
+@pytest.fixture(scope="module")
+def tiny_starved():
+    t = mrls(14, u=3, d=3, seed=0)
+    # pool far below the 42 endpoints: constant allocator starvation, so
+    # batches drain through the -1 sentinel path while the source keeps
+    # queueing — the conservation ledger must still close
+    return Simulator(build_tables(t), SimConfig(policy="polarized",
+                                                max_hops=10, pool=8))
+
+
+def _conservation(sim, st):
+    """The open-loop ledger: every accepted packet is queued at the
+    source, popped-but-uninjected, or was created in the network."""
+    arrived = int(st["arrived"])
+    backlog = sim.arrival_backlog(st)
+    pending = int(np.asarray(st["msg_rem"]).sum())
+    created = int(st["created"])
+    assert arrived == backlog + pending + created
+    in_flight = sim.pool - int(st["fl_len"])
+    assert created == int(st["ejected"]) + in_flight
+
+
+# --------------------------------------------------------------------- #
+# config validation (shared registry)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("kw", [
+    {"process": "uniform"},                               # not an arrival family
+    {"load": 0.0},                                        # rate <= 0
+    {"load": -0.2},
+    {"load": 1.2},                                        # poisson > 1/slot
+    {"arr_depth": 0},
+    {"process": "pareto", "pareto_alpha": 1.0},           # infinite-mean shape
+    {"process": "pareto", "pareto_alpha": 0.5},
+    {"process": "pareto", "pareto_cap": 0},
+    {"process": "pareto", "load": 3.0, "pareto_alpha": 3.0,
+     "pareto_cap": 2},                                    # arrival prob > 1
+    {"process": "diurnal", "diurnal_period": 1},          # sub-cycle period
+    {"process": "diurnal", "diurnal_amp": 1.5},
+    {"process": "diurnal", "diurnal_amp": -0.1},
+    {"process": "diurnal", "load": 0.8, "diurnal_amp": 0.5},  # peak > 1
+])
+def test_check_arrival_rejects_degenerates(kw):
+    args = {"process": "poisson", "load": 0.3, **kw}
+    with pytest.raises(ValueError):
+        check_arrival(args.pop("process"), args.pop("load"), **args)
+
+
+def test_traffic_and_spec_reject_bad_arrival():
+    with pytest.raises(ValueError):
+        Traffic("arrival", process="uniform")
+    from repro.api.specs import WorkloadSpec
+    with pytest.raises(ValueError):
+        WorkloadSpec("pareto", load=0.3, pareto_alpha=1.0)
+    with pytest.raises(ValueError):
+        WorkloadSpec("diurnal", load=0.8, diurnal_amp=0.5)
+    # engine rejects arrival family names (they ride in Traffic.process)
+    with pytest.raises(ValueError, match="arrival"):
+        check_pattern("poisson", engine=True)
+    # spec layer accepts them as first-class patterns
+    assert check_pattern("poisson") == "arrival"
+
+
+def test_bounded_pareto_mean_exact():
+    assert bounded_pareto_mean(1.5, 1) == 1.0
+    # cap=2: X in [1, 2) almost surely, so floor(X) is always 1
+    assert bounded_pareto_mean(2.0, 2) == pytest.approx(1.0)
+    # cap=3, alpha=1: P(floor=k) = F(k+1) - F(k) with F(x) = (1-1/x)/(2/3)
+    # is {1: 3/4, 2: 1/4} -> mean 5/4  (exact discrete hand computation)
+    assert bounded_pareto_mean(1.0 + 1e-12, 3) == pytest.approx(1.25,
+                                                                abs=1e-6)
+    # heavier tail (smaller alpha) and larger cap both raise the mean
+    assert bounded_pareto_mean(1.2, 64) > bounded_pareto_mean(1.8, 64)
+    assert bounded_pareto_mean(1.5, 256) > bounded_pareto_mean(1.5, 16)
+    # mean matches direct Monte-Carlo of the engine's inverse-CDF sampler
+    rng = np.random.default_rng(0)
+    a, cap = 1.5, 16
+    u = rng.random(200_000)
+    x = np.floor((1.0 - u * (1.0 - cap ** -a)) ** (-1.0 / a))
+    emp = np.clip(x, 1, cap).mean()
+    assert bounded_pareto_mean(a, cap) == pytest.approx(emp, rel=0.02)
+
+
+# --------------------------------------------------------------------- #
+# rate calibration (offered load converges to the configured rate)
+# --------------------------------------------------------------------- #
+def test_poisson_offered_rate_converges(tiny):
+    from hypothesis import given, settings, strategies as st_
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st_.integers(0, 5), load=st_.sampled_from([0.3]))
+    def prop(seed, load):
+        tr = Traffic("arrival", process="poisson", load=load)
+        r = tiny.run_serving(tr, warm=40, measure=400, seed=seed)
+        # one Bernoulli(load) draw per endpoint-slot: 42*400 samples,
+        # std of the mean ~ sqrt(p(1-p)/n) ~ 0.0035 -> 5 sigma
+        assert abs(r["offered"] - load) < 0.02
+        assert r["delivered"] <= r["offered"] + 0.02
+        _conservation(tiny, r["state"])
+    prop()
+
+
+def test_diurnal_offered_rate_converges_over_whole_periods(tiny):
+    from hypothesis import given, settings, strategies as st_
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st_.integers(0, 5))
+    def prop(seed):
+        # measure spans whole modulation periods, over which the integer
+        # -slot sine sums to zero: the mean offered rate is exactly load
+        tr = Traffic("arrival", process="diurnal", load=0.3,
+                     diurnal_amp=0.5, diurnal_period=64)
+        r = tiny.run_serving(tr, warm=64, measure=256, seed=seed)
+        assert abs(r["offered"] - 0.3) < 0.025
+        _conservation(tiny, r["state"])
+    prop()
+
+
+def test_pareto_offered_rate_and_conservation(tiny):
+    from hypothesis import given, settings, strategies as st_
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st_.integers(0, 5))
+    def prop(seed):
+        # heavy-tailed batches: rarer arrivals of mean-calibrated size.
+        # batch variance inflates the rate estimator, so the tolerance is
+        # looser than poisson's; conservation must stay exact.
+        tr = Traffic("arrival", process="pareto", load=0.25,
+                     pareto_alpha=1.5, pareto_cap=16)
+        r = tiny.run_serving(tr, warm=40, measure=400, seed=seed)
+        assert abs(r["offered"] - 0.25) < 0.05
+        _conservation(tiny, r["state"])
+    prop()
+
+
+def test_pareto_batches_conserved_through_pool_starvation(tiny_starved):
+    from hypothesis import given, settings, strategies as st_
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st_.integers(0, 5))
+    def prop(seed):
+        tr = Traffic("arrival", process="pareto", load=0.6,
+                     pareto_alpha=1.5, pareto_cap=8, arr_depth=4)
+        st = tiny_starved.make_state(tr, seed=seed)
+        st = tiny_starved.run_chunk(st, tr, 160)
+        assert int(st["pool_stall"]) > 0          # sentinel path exercised
+        assert int(st["arr_drop"]) > 0            # FIFO overflow path too
+        _conservation(tiny_starved, st)
+        # free-list stays duplicate-free under starvation
+        free = tiny_starved.free_ids(st)
+        assert len(np.unique(free)) == len(free)
+    prop()
+
+
+# --------------------------------------------------------------------- #
+# serving metric through the declarative API (p999 / NaN -> None lock)
+# --------------------------------------------------------------------- #
+def _tiny_exp(**wl):
+    from repro.api import Experiment, NetworkSpec, RouteSpec
+    from repro.api.specs import WorkloadSpec
+    return Experiment(
+        network=NetworkSpec("mrls", (("n_leaves", 14), ("u", 3), ("d", 3),
+                                     ("seed", 0))),
+        route=RouteSpec(policy="polarized", max_hops=10, pool=4096),
+        workload=WorkloadSpec(**wl), warm=30, measure=60)
+
+
+def test_serving_result_lock_p999_and_json(tiny):
+    from repro.api import run
+    from repro.api.runner import Result, _nan_none
+    res = run(_tiny_exp(pattern="poisson", load=0.3))
+    assert res.metric == "serving"
+    assert set(res.latency) == {"p50", "p99", "p999", "p9999"}
+    for v in res.latency.values():              # delivered window -> floats
+        assert isinstance(v, float)
+    assert res.latency["p50"] <= res.latency["p99"] <= res.latency["p999"]
+    assert res.offered is not None and res.throughput is not None
+    back = Result.from_dict(json.loads(json.dumps(res.to_dict())))
+    assert back.latency == res.latency and back.offered == res.offered
+    # the empty-window sentinel: NaN percentiles serialize as None
+    assert _nan_none(float("nan")) is None
+    assert _nan_none(3.0) == 3.0
+
+
+@pytest.mark.slow
+def test_serving_batched_replicas(tiny):
+    from repro.api import run
+    import dataclasses
+    exp = dataclasses.replace(_tiny_exp(pattern="poisson", load=0.3),
+                              replicas=2)
+    res = run(exp)
+    assert len(res.per_replica["offered"]) == 2
+    assert len(res.per_replica["p999"]) == 2
+    assert res.offered == pytest.approx(
+        float(np.mean(res.per_replica["offered"])))
+
+
+# --------------------------------------------------------------------- #
+# LM request-to-traffic bridge
+# --------------------------------------------------------------------- #
+def test_bridge_program_structure():
+    from repro.serving import (lm_decode_program, lm_moe_program,
+                               lm_prefill_program)
+    S, ranks = 42, 8
+    p = lm_prefill_program(S, ranks, 16)
+    assert p.partner.shape == (ranks - 1, S)
+    assert (p.partner[:, :ranks] == (np.arange(ranks) + 1) % ranks).all()
+    assert (p.partner[:, ranks:] == np.arange(ranks, S)).all()  # self-pairs
+    assert (p.packets == 16).all()
+    d = lm_decode_program(S, ranks, 4)
+    assert d.partner.shape == (1, S)
+    assert (d.partner[0, :ranks] == (np.arange(ranks) + ranks // 2)
+            % ranks).all()
+    m = lm_moe_program(S, 4, 7)
+    for ph in range(3):
+        # shifted exchange: every phase is a permutation without self-pairs
+        rp = m.partner[ph, :4]
+        assert sorted(rp) == list(range(4)) and (rp != np.arange(4)).all()
+    with pytest.raises(ValueError):
+        lm_decode_program(S, 1, 4)              # point-to-point needs peers
+    with pytest.raises(ValueError):
+        lm_prefill_program(4, 8, 4)             # more ranks than endpoints
+
+
+def test_bridge_shapes_from_model_configs():
+    from repro.configs import get_config
+    from repro.serving import PACKET_BYTES, request_phase_shape
+    dense = get_config("qwen3-1.7b")
+    sh = request_phase_shape(dense, "decode", ranks=8)
+    assert sh["packets"] == math.ceil(dense.d_model * 2 / PACKET_BYTES)
+    sh = request_phase_shape(dense, "prefill", ranks=8, tokens=1024)
+    assert sh["bytes_per_phase"] == (1024 // 8) * dense.d_model * 2
+    assert sh["n_phases"] == 7
+    moe = get_config("qwen3-moe-235b-a22b")
+    shm = request_phase_shape(moe, "moe", ranks=8, tokens=64)
+    assert shm["packets"] >= 1 and shm["n_phases"] == 7
+    with pytest.raises(ValueError):             # dense arch has no MoE leg
+        request_phase_shape(dense, "moe", ranks=8)
+    with pytest.raises(ValueError):
+        request_phase_shape(dense, "train", ranks=8)
+
+
+@pytest.mark.slow
+def test_request_to_spec_runs_to_completion():
+    from repro.api import run
+    from repro.serving import request_to_spec
+    wl = request_to_spec("qwen3-1.7b", "decode", 42, ranks=8)
+    assert wl.pattern == "lm_decode" and wl.ranks == 8
+    exp = _tiny_exp(pattern=wl.pattern, ranks=wl.ranks,
+                    vec_packets=wl.vec_packets)
+    import dataclasses
+    exp = dataclasses.replace(exp, warm=0, measure=0, max_slots=4000)
+    res = run(exp)
+    assert res.metric == "completion" and res.completed
+
+
+# --------------------------------------------------------------------- #
+# ServingSpec + sweep + CLI
+# --------------------------------------------------------------------- #
+def _tiny_serving_spec(**kw):
+    from repro.api import NetworkSpec, RouteSpec
+    from repro.serving import ServingSpec
+    base = dict(
+        network=NetworkSpec("mrls", (("n_leaves", 14), ("u", 3), ("d", 3),
+                                     ("seed", 0))),
+        route=RouteSpec(policy="polarized", max_hops=10, pool=4096),
+        process="poisson", loads=(0.3,), warm=20, measure=60,
+        name="t-serve")
+    return ServingSpec(**{**base, **kw})
+
+
+def test_serving_spec_round_trip_and_validation():
+    spec = _tiny_serving_spec(loads=(0.2, 0.5), model="qwen3-1.7b")
+    back = type(spec).from_json(spec.to_json())
+    assert back == spec and back.loads == (0.2, 0.5)
+    with pytest.raises(ValueError):
+        _tiny_serving_spec(loads=())
+    with pytest.raises(ValueError):
+        _tiny_serving_spec(loads=(1.2,))        # every load is validated
+    with pytest.raises(ValueError):
+        _tiny_serving_spec(sat_ratio=0.0)
+    with pytest.raises(ValueError):
+        _tiny_serving_spec(model="qwen3-1.7b", phase="train")
+
+
+@pytest.mark.slow
+def test_serve_sweep_knee_and_cli(tmp_path):
+    from repro.serving import serve_sweep
+    rec = serve_sweep(_tiny_serving_spec(loads=(0.3, 0.95), measure=80))
+    assert [p["load"] for p in rec["points"]] == [0.3, 0.95]
+    for p in rec["points"]:
+        assert {"offered", "delivered", "p50", "p99", "p999"} <= set(p)
+    # 0.95 on the tiny fabric oversubscribes: the knee must be detected
+    assert rec["saturation"] is not None
+    assert rec["saturation"]["load"] == 0.95
+    assert rec["request"] is None
+
+    # CLI round trip on the committed example spec
+    from repro.api.cli import main
+    out = tmp_path / "slo.json"
+    assert main(["serve-sweep", "examples/specs/tiny_serving.json",
+                 "--out", str(out)]) == 0
+    docs = json.loads(out.read_text())
+    assert [d["name"] for d in docs] == ["tiny.serve.poisson",
+                                        "tiny.serve.pareto"]
+    assert docs[0]["request"]["pattern"] == "lm_decode"
+    assert docs[0]["request"]["completed"]
+
+
+def test_bench_serve_baseline_committed():
+    doc = json.loads(open("benchmarks/BENCH_serve.json").read())
+    assert "tiny" in doc["overhead"] and doc["overhead"]["tiny"]["ratio"] > 0
+    names = [r["name"] for r in doc["sweeps"]]
+    # the headline MRLS-vs-Fat-Tree >=1k SLO curves with a visible knee
+    assert "serve.1k.mrls.poisson" in names
+    assert "serve.1k.fat_tree.poisson" in names
+    for r in doc["sweeps"]:
+        assert r["saturation"] is not None, r["name"]
+        tail = [p["p999"] for p in r["points"]]
+        assert tail == sorted(tail) or max(tail) > 2 * tail[0]
