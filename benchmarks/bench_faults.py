@@ -1,0 +1,187 @@
+"""Fault-injection gates: delta rebuild speed + degradation curves.
+
+Two phases, each in its own subprocess (clean cold-start, same method as
+``bench_serve.py``):
+
+* ``rebuild`` — host routing-table repair cost after ~1% of links fail:
+  ``RoutingTables.apply_failures`` (frontier-bounded delta, best of 3)
+  vs a from-scratch ``build_tables`` (full BFS + mask pack, best of 3).
+  The gated figure is ``ratio = full_s / delta_s`` — how much cheaper
+  repairing the tables is than rebuilding them.  The acceptance floor
+  at the 1k point is 5x; CI gates the tiny fabric against the committed
+  baseline with the usual 20% tolerance.
+* ``curve`` — end-to-end degradation sweep (``repro.api.degrade_sweep``):
+  delivered throughput under ``policy="degraded"`` routing at
+  0/1/2/5/10% of links down (one seeded ladder, failures landing in
+  warmup).  The gated figure is throughput *retention* at the worst
+  rate — the resilience headline.
+
+``--out`` merges records into ``BENCH_faults.json`` under
+``rebuild.<fabric>`` / ``curves.<fabric>``, preserving committed
+sections; the committed file carries the three-family 1k curves
+(``mrls1k`` / ``fat_tree1k`` / ``dragonfly1k``) produced by running
+``--fabric <name> --out benchmarks/BENCH_faults.json`` for each.
+``--check BASELINE.json`` exits non-zero when either gated figure falls
+more than 20% below its committed value.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+# name -> (family, builder params)  [1k set matches headline_a2a.json]
+FABRICS = {
+    "tiny": ("mrls", {"n_leaves": 14, "u": 3, "d": 3, "seed": 0}),
+    "mrls1k": ("mrls", {"n_leaves": 56, "u": 18, "d": 18, "seed": 1}),
+    "fat_tree1k": ("fat_tree", {"radix": 16, "h": 2}),
+    "dragonfly1k": ("dragonfly", {"a": 8, "p": 4, "h": 4}),
+}
+RATES = (0.0, 0.01, 0.02, 0.05, 0.10)
+LOAD = 0.5
+WARM, MEASURE = 200, 400
+DOWN_SLOT = 10
+REGRESSION_TOLERANCE = 0.20
+
+
+def _network(fabric: str):
+    from repro.api import NetworkSpec
+    family, params = FABRICS[fabric]
+    return NetworkSpec(family, params)
+
+
+def phase_rebuild(fabric: str) -> dict:
+    from repro.api import FailureSchedule
+    from repro.api.registry import build_network
+    from repro.core import build_tables, canonical_link_ids
+
+    topo = build_network(_network(fabric))
+    k = max(2, round(0.01 * len(canonical_link_ids(topo))))
+    events = FailureSchedule.random_links(topo, k, down_slot=0,
+                                          seed=0).events
+    tables = build_tables(topo)
+
+    full_best = None
+    for _ in range(5):
+        t0 = time.perf_counter()
+        build_tables(topo)
+        dt = time.perf_counter() - t0
+        full_best = dt if full_best is None else min(full_best, dt)
+
+    # the delta is microseconds-scale, so take the best of many reps to
+    # shake allocator/cache noise out of the gated ratio
+    delta_best, affected = None, 0
+    for _ in range(20):
+        t0 = time.perf_counter()
+        delta = tables.apply_failures(down=events)
+        dt = time.perf_counter() - t0
+        delta_best = dt if delta_best is None else min(delta_best, dt)
+        affected = delta.n_affected
+        tables.apply_failures(up=events)             # restore, untimed
+
+    return {"t": delta_best, "full_t": full_best,
+            "ratio": full_best / delta_best, "links_down": k,
+            "affected_leaves": affected, "n_leaves": int(topo.n_leaves)}
+
+
+def phase_curve(fabric: str) -> dict:
+    from repro.api import Experiment, RouteSpec, WorkloadSpec, degrade_sweep
+
+    base = Experiment(
+        network=_network(fabric),
+        route=RouteSpec(policy="degraded", max_hops=12),
+        workload=WorkloadSpec("uniform", load=LOAD),
+        name=f"faults.{fabric}", seed=0, warm=WARM, measure=MEASURE)
+    t0 = time.perf_counter()
+    rec = degrade_sweep(base, RATES, down_slot=DOWN_SLOT, fail_seed=0)
+    dt = time.perf_counter() - t0
+    points = [{"rate": p["rate"], "n_links_down": p["n_links_down"],
+               "delivered": p["delivered"], "retention": p["retention"],
+               "p99": p["p99"]} for p in rec["points"]]
+    return {"t": dt, "n_links": rec["n_links"], "points": points,
+            "retention_worst": points[-1]["retention"]}
+
+
+PHASES = {"rebuild": phase_rebuild, "curve": phase_curve}
+
+
+def _child(phase: str, fabric: str):
+    print(json.dumps(PHASES[phase](fabric)))
+
+
+def _spawn(phase: str, fabric: str) -> dict:
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()),
+         "--phase", phase, "--fabric", fabric],
+        check=True, capture_output=True, text=True, cwd=str(_ROOT))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(fabric: str, out_path, check_path):
+    from benchmarks.common import emit
+    reb = _spawn("rebuild", fabric)
+    cur = _spawn("curve", fabric)
+    emit(f"bench_faults.{fabric}.rebuild_delta", reb["t"] * 1e6,
+         f"{reb['ratio']:.1f}x faster than full "
+         f"({reb['affected_leaves']}/{reb['n_leaves']} leaves)")
+    emit(f"bench_faults.{fabric}.rebuild_full", reb["full_t"] * 1e6,
+         f"{reb['links_down']} links down")
+    emit(f"bench_faults.{fabric}.curve", cur["t"] * 1e6,
+         f"retention@{RATES[-1]:g}={cur['retention_worst']:.3f}")
+
+    if out_path:
+        doc = {}
+        p = pathlib.Path(out_path)
+        if p.exists():
+            doc = json.loads(p.read_text())
+        doc.setdefault("rebuild", {})[fabric] = reb
+        doc.setdefault("curves", {})[fabric] = {
+            "load": LOAD, "warm": WARM, "measure": MEASURE,
+            "down_slot": DOWN_SLOT, "rates": list(RATES), **cur}
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {p}")
+
+    if check_path:
+        base = json.loads(pathlib.Path(check_path).read_text())
+        failed = False
+        ref = base.get("rebuild", {}).get(fabric)
+        if ref is None:
+            print(f"no committed rebuild baseline for {fabric!r}; skipping")
+        else:
+            floor = (1 - REGRESSION_TOLERANCE) * ref["ratio"]
+            ok = reb["ratio"] >= floor
+            print(f"regression check [{'OK' if ok else 'REGRESSION'}]: "
+                  f"rebuild ratio={reb['ratio']:.1f}x vs committed "
+                  f"{ref['ratio']:.1f}x (floor {floor:.1f}x)")
+            failed |= not ok
+        ref = base.get("curves", {}).get(fabric)
+        if ref is None:
+            print(f"no committed curve baseline for {fabric!r}; skipping")
+        else:
+            floor = (1 - REGRESSION_TOLERANCE) * ref["retention_worst"]
+            ok = cur["retention_worst"] >= floor
+            print(f"regression check [{'OK' if ok else 'REGRESSION'}]: "
+                  f"retention@{RATES[-1]:g}={cur['retention_worst']:.3f} vs "
+                  f"committed {ref['retention_worst']:.3f} "
+                  f"(floor {floor:.3f})")
+            failed |= not ok
+        if failed:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+
+    def _opt(flag, default):
+        return argv[argv.index(flag) + 1] if flag in argv else default
+    _fabric = _opt("--fabric", "tiny")
+    _phase = _opt("--phase", None)
+    if _phase:
+        _child(_phase, _fabric)
+    else:
+        main(_fabric, _opt("--out", None), _opt("--check", None))

@@ -32,6 +32,10 @@ if [ "$LANE" = "pr" ]; then
     python -m repro.api serve-sweep examples/specs/tiny_serving.json \
         --out artifacts/tiny_serving_slo.json
 
+    echo "== smoke: degraded-routing resilience sweep on a tiny fabric =="
+    python -m repro.api degrade examples/specs/tiny_faults.json \
+        --out artifacts/tiny_degrade.json
+
     echo "CI OK (pr lane)"
     exit 0
 elif [ "$LANE" != "full" ]; then
@@ -94,5 +98,13 @@ echo "== bench: extreme-scale headline sweep (tiny points) =="
 # measurement, so the gate is host-speed independent)
 python benchmarks/bench_scale.py --sizes tiny \
     --out artifacts/BENCH_scale.json --check benchmarks/BENCH_scale.json
+
+echo "== bench: fault injection (delta rebuild + degradation curve) =="
+# emits artifacts/BENCH_faults.json and fails if the delta-vs-full
+# rebuild speed ratio or the throughput retention at 10% links down
+# regresses >20% against the committed benchmarks/BENCH_faults.json
+# tiny baseline (ratio is same-host relative, so host-speed independent)
+python benchmarks/bench_faults.py --fabric tiny \
+    --out artifacts/BENCH_faults.json --check benchmarks/BENCH_faults.json
 
 echo "CI OK (full lane)"

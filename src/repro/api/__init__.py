@@ -28,6 +28,8 @@ from .runner import (Result, SimulatorCache, open_simulator, routing_tables,
                      run, run_all)
 from .memory import estimate_memory, format_bytes
 from .sweep import expand_axes, sweep
+from .degrade import degrade_sweep, degrade_sweep_from_dict
+from ..core.failures import FailureEvent, FailureSchedule
 
 __all__ = [
     "NetworkSpec", "RouteSpec", "WorkloadSpec", "Experiment",
@@ -38,4 +40,6 @@ __all__ = [
     "run_all",
     "estimate_memory", "format_bytes",
     "expand_axes", "sweep",
+    "degrade_sweep", "degrade_sweep_from_dict",
+    "FailureEvent", "FailureSchedule",
 ]

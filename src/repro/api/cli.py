@@ -15,6 +15,12 @@ Commands:
   ``{"servings": [...]}``, bare object accepted); runs the open-loop
   load ladder and prints the p50/p99/p999 SLO curve plus the saturation
   knee per spec.  ``--out`` writes the full SLO records.
+* ``degrade <spec.json> [--out faults.json]`` — spec file holds
+  ``{"base": <experiment>, "rates": [0, 0.01, ...]}`` (or
+  ``{"sweeps": [...]}``); fails the given fraction of links early in
+  warmup via one seeded :class:`repro.core.FailureSchedule` ladder and
+  prints delivered throughput + retention per rate (the resilience
+  metric's degradation curve).
 * ``estimate <spec.json> [--out est.json]`` — price every experiment's
   memory footprint (routing tables, per-replica state, transients) via
   :func:`repro.api.estimate_memory` *without* running anything — the
@@ -57,6 +63,8 @@ def _summary(res: Result) -> str:
     elif res.throughput is not None:
         bits.append(f"throughput={res.throughput:.3f}")
         bits.append(f"avg_hops={res.avg_hops:.2f}")
+    if res.fail_drop:
+        bits.append(f"fail_drop={res.fail_drop:g}")
     if res.latency is not None:
         bits.append("lat " + "/".join(f"{k}={v}" for k, v in res.latency.items()))
     if res.slots is not None:
@@ -144,6 +152,26 @@ def _cmd_serve_sweep(args) -> int:
     return 0
 
 
+def _cmd_degrade(args) -> int:
+    from .degrade import degrade_sweep_from_dict
+    records = degrade_sweep_from_dict(_load(args.spec))
+    for rec in records:
+        print(f"{rec['name']}  policy={rec['policy']}  "
+              f"fail_policy={rec['fail_policy']}  links={rec['n_links']}")
+        for p in rec["points"]:
+            ret = ("-" if p["retention"] is None
+                   else f"{p['retention']:.3f}")
+            print(f"  rate={p['rate']:g}  down={p['n_links_down']}  "
+                  f"delivered={p['delivered']:.3f}  retention={ret}  "
+                  f"p50={_fmt_q(p.get('p50'))}  p99={_fmt_q(p.get('p99'))}  "
+                  f"fail_drop={p['fail_drop']:g}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {len(records)} degradation record(s) to {args.out}")
+    return 0
+
+
 def _cmd_estimate(args) -> int:
     doc = _load(args.spec)
     specs = doc["experiments"] if "experiments" in doc else [doc]
@@ -207,6 +235,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_serve.add_argument("spec", help="path to the ServingSpec JSON file")
     p_serve.add_argument("--out", help="write full SLO JSON records here")
     p_serve.set_defaults(fn=_cmd_serve_sweep)
+
+    p_deg = sub.add_parser(
+        "degrade", help="run a link-failure degradation sweep spec")
+    p_deg.add_argument("spec", help="path to the degrade JSON file")
+    p_deg.add_argument("--out", help="write full degradation records here")
+    p_deg.set_defaults(fn=_cmd_degrade)
 
     p_est = sub.add_parser(
         "estimate", help="estimate memory for experiment spec(s), no run")

@@ -1,0 +1,122 @@
+"""Degraded-mode resilience sweeps: throughput retention vs links down.
+
+:func:`degrade_sweep` takes one base :class:`Experiment` and a ladder of
+link-failure *rates* (fraction of the fabric's undirected links), runs
+the resilience metric at each rate, and folds the results into a
+degradation record::
+
+    {"name": ..., "base": {...}, "n_links": L, "policy": ...,
+     "fail_policy": "requeue" | "drop", "down_slot": ...,
+     "points": [{"rate", "n_links_down", "delivered", "avg_hops",
+                 "fail_drop", "p50", "p99", "retention"}, ...]}
+
+``retention`` is delivered throughput relative to the sweep's rate-0
+point (``None`` when the sweep doesn't include rate 0).  Failed links
+are picked by :meth:`FailureSchedule.random_links` from one seed ladder,
+so the 1%% set is a subset of the 2%% set and the curve is monotone in
+the failed-link population, not resampled noise.
+
+All rates share ONE armed simulator: the engine's failure branch traces
+the live-mask path once, and between rates only the *host* schedule and
+the device up-mask/table state change (``run_resilience`` restores the
+pristine tables after every run), so an N-point sweep costs one compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from ..core.failures import FailureSchedule, canonical_link_ids
+from ..core.routing import build_tables
+from ..simulator.engine import Simulator
+from .registry import build_network
+from .runner import _to_traffic
+from .specs import Experiment
+
+__all__ = ["degrade_sweep", "degrade_sweep_from_dict"]
+
+
+def _schedule(topo, k: int, *, down_slot: int, seed: int,
+              fail_policy: str) -> FailureSchedule:
+    if k == 0:
+        return FailureSchedule(events=(), policy=fail_policy)
+    return FailureSchedule.random_links(topo, k, down_slot=down_slot,
+                                        seed=seed, policy=fail_policy)
+
+
+def degrade_sweep(base: Experiment, rates: Sequence[float], *,
+                  down_slot: int = 1, fail_policy: str = "requeue",
+                  fail_seed: int = 0) -> dict:
+    """Run one degradation sweep and return its record (see module doc).
+
+    ``base`` supplies fabric, route (typically ``policy="degraded"``),
+    workload, warm/measure window, and seed; any schedule already on
+    ``base.network`` is ignored — the sweep owns failure injection.
+    """
+    rates = [float(r) for r in rates]
+    if not rates:
+        raise ValueError("degrade_sweep needs at least one rate")
+    if any(r < 0 or r >= 1 for r in rates):
+        raise ValueError(f"rates must lie in [0, 1), got {rates}")
+
+    network = dataclasses.replace(base.network, failures=None)
+    topo = build_network(network)
+    n_links = int(len(canonical_link_ids(topo)))
+    ks = [int(round(r * n_links)) for r in rates]
+
+    schedules = [_schedule(topo, k, down_slot=down_slot, seed=fail_seed,
+                           fail_policy=fail_policy) for k in ks]
+
+    # arm the simulator with the largest schedule so the failure branch
+    # is traced; per-rate we only swap the host-side schedule object
+    # (run_resilience restores pristine tables after each run)
+    arm = max(schedules, key=len)
+    if len(arm) == 0:
+        arm = _schedule(topo, 1, down_slot=down_slot, seed=fail_seed,
+                        fail_policy=fail_policy)
+    tables = build_tables(topo)
+    sim = Simulator(tables, base.route.to_sim_config(), failures=arm)
+    traffic = _to_traffic(base)
+
+    points = []
+    for rate, k, sched in zip(rates, ks, schedules):
+        sim.failures = sched.validate(topo)
+        r = sim.run_resilience(traffic, warm=base.warm,
+                               measure=base.measure, seed=base.seed)
+        points.append({
+            "rate": rate, "n_links_down": k,
+            "delivered": float(r["throughput"]),
+            "avg_hops": float(r["avg_hops"]),
+            "fail_drop": int(r["fail_drop"]),
+            "p50": _none_nan(r["p0.5"]), "p99": _none_nan(r["p0.99"]),
+        })
+
+    base_pt = next((p for p in points if p["n_links_down"] == 0), None)
+    for p in points:
+        p["retention"] = (p["delivered"] / base_pt["delivered"]
+                          if base_pt and base_pt["delivered"] else None)
+
+    return {"name": base.label(), "base": base.to_dict(),
+            "n_links": n_links, "policy": base.route.policy,
+            "fail_policy": fail_policy, "down_slot": down_slot,
+            "fail_seed": fail_seed, "points": points}
+
+
+def _none_nan(v) -> Optional[float]:
+    v = float(v)
+    return None if v != v else v
+
+
+def degrade_sweep_from_dict(spec: dict) -> list:
+    """CLI bridge: ``{"base": {experiment}, "rates": [...], ...}`` or a
+    ``{"sweeps": [...]}`` list of such specs; returns a list of records."""
+    specs = spec.get("sweeps", [spec]) if isinstance(spec, dict) else spec
+    out = []
+    for s in specs:
+        base = Experiment.from_dict(s["base"])
+        out.append(degrade_sweep(
+            base, s.get("rates", (0.0, 0.01, 0.02, 0.05, 0.10)),
+            down_slot=int(s.get("down_slot", 1)),
+            fail_policy=s.get("fail_policy", "requeue"),
+            fail_seed=int(s.get("fail_seed", 0))))
+    return out

@@ -74,7 +74,7 @@ def estimate_memory(network: Union[NetworkSpec, Experiment],
 
     # ---- routing tables (device-resident) ---------------------------- #
     one_mask = mask_table_bytes(n1, n, p)
-    n_masks = 2 if route.policy == "polarized" else 1
+    n_masks = 2 if route.policy in ("polarized", "degraded") else 1
     dist_bytes = n1 * n * 2                           # int16
     # read the limit off the module so it tracks build_tables' "auto"
     # resolution exactly (including test-time overrides)
@@ -110,11 +110,29 @@ def estimate_memory(network: Union[NetworkSpec, Experiment],
         + route.hist_bins * 4          # lat_hist
     )
 
+    # ---- failure-schedule state (per replica, armed schedules only) --- #
+    # with a non-empty FailureSchedule the engine moves the routing
+    # tables INTO the state (tbl_min[/tbl_away] + tbl_dist) so
+    # update_tables can rewrite them without recompiling, and adds the
+    # live up-masks (link_up [N*P] bool, switch_up [N] bool) plus the
+    # fail_drop counter
+    has_failures = (network.failures is not None
+                    and len(network.failures) > 0)
+    failure_state = (n_masks * one_mask + dist_bytes   # tbl_min/away/dist
+                     + n * p + n                       # link_up, switch_up
+                     + 4) if has_failures else 0       # fail_drop
+    state += failure_state
+
     # ---- step transients (jit-internal upper bound) ------------------ #
     # dominated by the [NR, P] f32 score/tie/occ planes (a handful are
     # live at once) and the [N, R_max, P] one-hot of the segmented
     # arbitration max
     transient = 6 * nr * p * 4 + n * r_max * p
+    if has_failures:
+        # host-side delta rebuild scratch: _pack_mask_block packs
+        # affected leaf rows in leaf_block chunks (min+away words live
+        # at once while repacking)
+        transient += 2 * min(256, n1) * n * w * 4
 
     total = (tables["dist_leaf_bytes"] + tables["device_mask_bytes"]
              + tables["host_mask_bytes"] + constants + replicas * state)
@@ -126,6 +144,8 @@ def estimate_memory(network: Union[NetworkSpec, Experiment],
                  "max_ports": p, "mask_words": w, "pool": pool,
                  "n_queues": nq, "n_requesters": nr},
         "tables": tables,
+        "failures": {"armed": has_failures,
+                     "state_bytes_per_replica": failure_state},
         "constants_bytes": constants,
         "state_bytes_per_replica": state,
         "transient_bytes": transient,

@@ -88,6 +88,7 @@ class Result:
     pool_stall: Optional[float] = None
     offered: Optional[float] = None
     dropped: Optional[float] = None
+    fail_drop: Optional[float] = None
     latency: Optional[Mapping[str, float]] = None
     slots: Optional[float] = None
     completed: Optional[bool] = None
@@ -139,8 +140,12 @@ class Result:
 # simulator lifetime
 # ---------------------------------------------------------------------- #
 def _make_simulator(network: NetworkSpec, route: RouteSpec) -> Simulator:
-    tables = build_tables(build_network(network))
-    return Simulator(tables, route.to_sim_config())
+    topo = build_network(network)
+    if network.failures is not None:
+        network.failures.validate(topo)   # fail before the table build
+    tables = build_tables(topo)
+    return Simulator(tables, route.to_sim_config(),
+                     failures=network.failures)
 
 
 class SimulatorCache:
@@ -344,6 +349,26 @@ def _batched_metrics(sim: Simulator, exp: Experiment, seeds) -> Tuple[str, dict]
         per.update({lbl: tuple(_nan_none(v) for v in r[k])
                     for lbl, k in _LATENCY_KEYS})
         return metric, per
+    if metric == "resilience":
+        # Failure transitions mutate host routing tables mid-run, so
+        # replicas cannot share one vmapped executable; loop scalar runs
+        # (replica i stays bitwise the scalar run with seed=seeds[i]).
+        per = {"throughput": [], "avg_hops": [], "ejected": [],
+               "pool_stall": [], "fail_drop": []}
+        lat = {lbl: [] for lbl, _ in _LATENCY_KEYS}
+        for s in seeds:
+            r = sim.run_resilience(traffic, warm=exp.warm,
+                                   measure=exp.measure, seed=s)
+            per["throughput"].append(float(r["throughput"]))
+            per["avg_hops"].append(float(r["avg_hops"]))
+            per["ejected"].append(int(r["ejected"]))
+            per["pool_stall"].append(int(r["pool_stall"]))
+            per["fail_drop"].append(int(r["fail_drop"]))
+            for lbl, k in _LATENCY_KEYS:
+                lat[lbl].append(_nan_none(r[k]))
+        out = {k: tuple(v) for k, v in per.items()}
+        out.update({lbl: tuple(v) for lbl, v in lat.items()})
+        return metric, out
     if metric == "completion":
         if w.pattern != "all2all":
             raise ValueError(
@@ -381,6 +406,11 @@ def _batched_result(exp: Experiment, seeds, metric: str, per: dict) -> Result:
         kw = dict(throughput=mean("throughput"), offered=mean("offered"),
                   dropped=mean("dropped"), pool_stall=mean("pool_stall"),
                   latency={lbl: mean(lbl) for lbl, _ in _LATENCY_KEYS})
+    elif metric == "resilience":
+        kw = dict(throughput=mean("throughput"), avg_hops=mean("avg_hops"),
+                  ejected=mean("ejected"), pool_stall=mean("pool_stall"),
+                  fail_drop=mean("fail_drop"),
+                  latency={lbl: mean(lbl) for lbl, _ in _LATENCY_KEYS})
     else:
         kw = dict(slots=mean("slots"),
                   completed=bool(all(per["completed"])),
@@ -414,6 +444,14 @@ def _unfold_batch(group, metric: str, per: dict) -> list:
                       offered=per["offered"][i],
                       dropped=per["dropped"][i],
                       pool_stall=per["pool_stall"][i],
+                      latency={lbl: per[lbl][i]
+                               for lbl, _ in _LATENCY_KEYS})
+        elif metric == "resilience":
+            kw = dict(throughput=per["throughput"][i],
+                      avg_hops=per["avg_hops"][i],
+                      ejected=per["ejected"][i],
+                      pool_stall=per["pool_stall"][i],
+                      fail_drop=per["fail_drop"][i],
                       latency={lbl: per[lbl][i]
                                for lbl, _ in _LATENCY_KEYS})
         else:
@@ -540,6 +578,16 @@ def _run_on(sim: Simulator, exp: Experiment) -> Result:
                       offered=float(r["offered"]),
                       dropped=int(r["dropped"]),
                       pool_stall=int(r["pool_stall"]), latency=lat)
+    if metric == "resilience":
+        r = sim.run_resilience(traffic, warm=exp.warm, measure=exp.measure,
+                               seed=exp.seed)
+        lat = {lbl: _nan_none(r[k]) for lbl, k in _LATENCY_KEYS}
+        return Result(experiment=exp, metric=metric,
+                      throughput=float(r["throughput"]),
+                      avg_hops=float(r["avg_hops"]),
+                      ejected=int(r["ejected"]),
+                      pool_stall=int(r["pool_stall"]),
+                      fail_drop=int(r["fail_drop"]), latency=lat)
     if metric == "completion":
         if exp.workload.pattern != "all2all":
             raise ValueError(

@@ -21,6 +21,7 @@ from typing import Any, Mapping, Optional, Tuple
 # the single pattern-name registry, shared with the engine's ``Traffic``
 # (repro.workloads.patterns) — a typo'd pattern raises the same error in
 # both layers
+from ..core.failures import FailureSchedule
 from ..workloads.patterns import (ARRIVAL_PATTERNS, BERNOULLI_PATTERNS,
                                   COLLECTIVE_PATTERNS, check_arrival,
                                   check_pattern, check_schedule)
@@ -63,23 +64,43 @@ class NetworkSpec:
     (``mrls | fat_tree | oft | dragonfly | dragonfly_plus | rfc`` out of the
     box).  ``params`` are the builder's keyword arguments, stored as a
     sorted tuple of pairs so the spec is hashable and order-insensitive.
+
+    ``failures`` optionally attaches a frozen
+    :class:`repro.core.FailureSchedule` — deterministic link/switch
+    down/up events the simulator applies mid-run.  It is part of the spec
+    (and its hash), so the runner's simulator cache never conflates a
+    degraded fabric with its pristine twin; the schedule is validated
+    against the built topology at simulator-construction time.
     """
 
     family: str
     params: Tuple[Tuple[str, Any], ...] = ()
+    failures: Optional[FailureSchedule] = None
 
     def __post_init__(self):
         object.__setattr__(self, "params", _freeze_params(self.params))
+        if self.failures is not None and not isinstance(self.failures,
+                                                        FailureSchedule):
+            object.__setattr__(self, "failures",
+                               FailureSchedule.from_dict(self.failures))
 
     def param_dict(self) -> dict:
         return {k: v for k, v in self.params}
 
     def to_dict(self) -> dict:
-        return {"family": self.family, "params": self.param_dict()}
+        d = {"family": self.family, "params": self.param_dict()}
+        if self.failures is not None:
+            d["failures"] = self.failures.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "NetworkSpec":
-        return cls(family=d["family"], params=d.get("params", {}))
+        failures = d.get("failures")
+        if failures is not None and not isinstance(failures,
+                                                   FailureSchedule):
+            failures = FailureSchedule.from_dict(failures)
+        return cls(family=d["family"], params=d.get("params", {}),
+                   failures=failures)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -269,7 +290,7 @@ class Experiment:
 
     def __post_init__(self):
         if self.metric not in ("auto", "throughput", "latency", "completion",
-                               "serving"):
+                               "serving", "resilience"):
             raise ValueError(f"unknown metric {self.metric!r}")
         if self.replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {self.replicas}")
@@ -285,6 +306,8 @@ class Experiment:
             return "completion"
         if kind == "arrival":
             return "serving"
+        if self.network.failures is not None and len(self.network.failures):
+            return "resilience"
         return "throughput"
 
     def label(self) -> str:

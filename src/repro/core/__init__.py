@@ -4,11 +4,12 @@ from .topology import (
     Topology, mrls, fat_tree, oft, dragonfly, dragonfly_plus, rfc,
 )
 from .routing import (
-    bfs_distances, RoutingTables, build_tables, pack_port_masks,
+    bfs_distances, RoutingTables, TableDelta, build_tables, pack_port_masks,
     iter_port_mask_blocks, mask_table_bytes, polarized_port_mask,
     route_packet_host, find_corners, POLICIES, MASK_LAYOUTS,
-    DENSE_MASK_LIMIT,
+    DENSE_MASK_LIMIT, UNREACHABLE,
 )
+from .failures import FailureEvent, FailureSchedule, canonical_link_ids
 from .analytics import (
     Metrics, exact_metrics, theta, cost_links, cost_switches,
     mrls_distance_distribution, mrls_expected_A, mrls_expected_A_star,

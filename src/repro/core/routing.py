@@ -23,6 +23,7 @@ from .topology import Topology
 __all__ = [
     "bfs_distances",
     "RoutingTables",
+    "TableDelta",
     "build_tables",
     "pack_port_masks",
     "iter_port_mask_blocks",
@@ -32,11 +33,21 @@ __all__ = [
     "POLICIES",
     "MASK_LAYOUTS",
     "DENSE_MASK_LIMIT",
+    "UNREACHABLE",
 ]
 
-POLICIES = ("polarized", "minimal_adaptive", "ksp", "ugal", "valiant")
+POLICIES = ("polarized", "minimal_adaptive", "ksp", "ugal", "valiant",
+            "degraded")
 
 MASK_LAYOUTS = ("auto", "dense", "blocked")
+
+# Sentinel distance for switches unreachable after failures.  Chosen so it
+# (a) stays >= 0 — the engine's pristine-construction assert and every
+# ``d >= 0`` check pass — and (b) sits far above any real diameter yet far
+# below int16 overflow, so ``d - 1`` / ``d + 1`` comparisons against real
+# distances are always false and hop-budget tests always fail (a packet is
+# never steered toward an unreachable switch).
+UNREACHABLE = 16384
 
 # ``masks="auto"`` switches to the blocked (streamed) layout once one dense
 # numpy mask table would exceed this many bytes — small fabrics keep the
@@ -48,33 +59,73 @@ DENSE_MASK_LIMIT = 256 * 1024 * 1024
 # ---------------------------------------------------------------------- #
 # distances
 # ---------------------------------------------------------------------- #
-def bfs_distances(topo: Topology, sources: np.ndarray) -> np.ndarray:
+def bfs_distances(topo: Topology, sources: np.ndarray, *,
+                  nbrs: Optional[np.ndarray] = None) -> np.ndarray:
     """[len(sources), N] int16 hop distances (-1 = unreachable).
 
     Per-source frontier BFS with vectorized neighbor expansion; fast enough
     for the paper's 100K-endpoint networks (~6K sources x ~9K switches).
     The TPU-resident alternative is tropical matrix powering — see
     ``repro.kernels.minplus`` (the Pallas hot-spot kernel).
+
+    ``nbrs`` overrides the adjacency (same ``[N, P]`` -1-padded layout) —
+    the delta-rebuild path passes an *effective* adjacency with failed
+    links/switches masked out without mutating the topology.
     """
-    nbrs = topo.nbrs
-    n = topo.n_switches
-    sources = np.asarray(sources)
-    out = np.full((len(sources), n), -1, np.int16)
-    for row, s in enumerate(sources):
-        dist = out[row]
-        visited = np.zeros(n, bool)
-        frontier = np.asarray([s], dtype=np.int64)
-        visited[s] = True
+    nbrs = topo.nbrs if nbrs is None else nbrs
+    n, p = topo.n_switches, nbrs.shape[1]
+    sources = np.asarray(sources, dtype=np.int64)
+    k = len(sources)
+    out = np.full((k, n), -1, np.int16)
+    # level-synchronous over source *blocks*: expand every block member's
+    # frontier in one scatter per hop level — work proportional to the
+    # frontier population (not B*N*P), which is what makes the
+    # delta-rebuild path cheap when only a few leaf rows changed.  The
+    # block bounds the per-level index arrays at the 100k scale points.
+    block = 256
+    for lo in range(0, k, block):
+        hi = min(lo + block, k)
+        b = hi - lo
+        frontier = np.zeros((b, n), bool)
+        frontier[np.arange(b), sources[lo:hi]] = True
+        visited = frontier.copy()
+        dist = out[lo:hi]
         d = 0
-        while frontier.size:
-            dist[frontier] = d
-            cand = nbrs[frontier].ravel()
-            cand = cand[cand >= 0]
-            cand = np.unique(cand)
-            frontier = cand[~visited[cand]]
-            visited[frontier] = True
+        while True:
+            rows, nodes = np.nonzero(frontier)
+            if rows.size == 0:
+                break
+            dist[rows, nodes] = d
+            cand = nbrs[nodes]                       # [F, P]
+            ok = (cand >= 0).ravel()
+            nxt = np.zeros_like(frontier)
+            nxt[np.repeat(rows, p)[ok], cand.ravel()[ok]] = True
+            frontier = nxt & ~visited
+            visited |= frontier
             d += 1
     return out
+
+
+@dataclasses.dataclass
+class TableDelta:
+    """Changed rows + live masks from one :meth:`RoutingTables.apply_failures`.
+
+    ``leaf_rows`` indexes the leaf-rank axis; the row arrays carry the
+    recomputed distance/mask rows for exactly those leaves.  ``link_up``
+    and ``switch_up`` are the *full* current liveness masks (tiny:
+    ``N*P`` + ``N`` bools) — the engine consumes them wholesale.
+    """
+
+    leaf_rows: np.ndarray      # [K] int32 affected leaf ranks
+    dist_rows: np.ndarray      # [K, N] int16 (UNREACHABLE where cut off)
+    min_rows: np.ndarray       # [K, N, W] uint32 toward-bit rows
+    away_rows: np.ndarray      # [K, N, W] uint32 away-bit rows
+    link_up: np.ndarray        # [N, P] bool — directed-port liveness
+    switch_up: np.ndarray      # [N] bool
+
+    @property
+    def n_affected(self) -> int:
+        return int(self.leaf_rows.shape[0])
 
 
 @dataclasses.dataclass
@@ -115,6 +166,8 @@ class RoutingTables:
     away_mask: Optional[np.ndarray] = None   # [N1, N, W] uint32 away-bits
     mask_layout: str = "dense"     # "dense" | "blocked"
     leaf_block: int = 256          # block height of the blocked layout
+    dead_ports: Optional[np.ndarray] = None     # [N, P] bool, lazily allocated
+    dead_switches: Optional[np.ndarray] = None  # [N] bool, lazily allocated
 
     @property
     def diameter_leaf(self) -> int:
@@ -152,6 +205,139 @@ class RoutingTables:
         yield from iter_port_mask_blocks(self.dist_leaf, self.topo.nbrs,
                                          block)
 
+    # ------------------------------------------------------------------ #
+    # delta rebuilds under failures
+    # ------------------------------------------------------------------ #
+    def apply_failures(self, down=(), up=()) -> TableDelta:
+        """Apply link/switch state changes; recompute only affected rows.
+
+        ``down``/``up`` are iterables of :class:`repro.core.failures
+        .FailureEvent` taking effect now (``up`` restores previously
+        downed elements).  The method mutates ``dist_leaf`` (and the
+        dense ``min_mask``/``away_mask`` when materialized) **in place**
+        — rows for unaffected leaves are untouched, and the dense
+        ``[N1, N, W]`` tables are never re-materialized — then returns a
+        :class:`TableDelta` with exactly the changed rows plus the full
+        liveness masks.
+
+        The frontier bound: a downed link ``{a, b}`` can change leaf
+        ``t``'s distances only if the farther endpoint (say ``a``, with
+        ``d(t,a) == d(t,b) + 1``) has **no other live toward port** —
+        otherwise every shortest path re-routes through the alternate
+        predecessor and all distances are preserved (both orientations
+        are tested).  A restored link can change leaf ``t`` only if
+        ``|d(t,a) - d(t,b)| >= 2`` on the current tables.  Switch events
+        fall back to recomputing every leaf row (they cut up to ``P``
+        links at once; the bench ladder uses link events only).
+
+        Masks are always packed against the **static full adjacency**
+        (``topo.nbrs``): a toward bit through a dead port stays set, and
+        the engine's live up-mask excludes it at runtime.  That keeps
+        :func:`_pack_mask_block` layout-identical for both mask layouts
+        and makes restores nearly free — when a link comes back and no
+        distance changed, the bits are already correct.
+        """
+        topo = self.topo
+        n, p = topo.n_switches, topo.max_ports
+        nbrs = topo.nbrs
+        if self.dead_ports is None:
+            self.dead_ports = np.zeros((n, p), bool)
+            self.dead_switches = np.zeros(n, bool)
+        n1 = self.dist_leaf.shape[0]
+        affected = np.zeros(n1, bool)
+        d32 = self.dist_leaf.astype(np.int32)          # sentinel-safe math
+
+        # mark every down first, collecting freshly-killed link pairs; the
+        # affected test then runs once, batched over all endpoints, against
+        # the final dead state (a superset of the per-event sequential
+        # test -- extra rows just recompute to identical values)
+        down_pairs = []
+        for ev in down:
+            if ev.kind == "switch":
+                self.dead_switches[ev.id] = True
+                affected[:] = True
+                continue
+            c, pt = divmod(ev.id, p)
+            nb = int(nbrs[c, pt])
+            nbp = int(topo.nbr_port[c, pt])
+            if not self.dead_ports[c, pt]:
+                down_pairs.append((c, nb))
+            self.dead_ports[c, pt] = True
+            self.dead_ports[nb, nbp] = True
+        if down_pairs and not affected.all():
+            # x = farther endpoint candidates: both orientations of every
+            # killed link; leaf t is affected iff d(t,x) == d(t,y) + 1 and
+            # x keeps no other live toward port
+            xs = sorted({x for pair in down_pairs for x in pair})
+            xi = {x: i for i, x in enumerate(xs)}
+            xa = np.asarray(xs)
+            live = (nbrs[xa] >= 0) & ~self.dead_ports[xa]        # [X, P]
+            nb_x = np.where(live, nbrs[xa], 0)
+            alt = (live[None] & (d32[:, nb_x]
+                                 == (d32[:, xa] - 1)[:, :, None])
+                   ).any(axis=2)                                 # [N1, X]
+            x2 = np.asarray([x for c, nb in down_pairs for x in (c, nb)])
+            y2 = np.asarray([y for c, nb in down_pairs for y in (nb, c)])
+            far = d32[:, x2] == d32[:, y2] + 1                   # [N1, 2K]
+            cols = np.asarray([xi[x] for x in x2])
+            affected |= (far & ~alt[:, cols]).any(axis=1)
+
+        up_pairs = []
+        for ev in up:
+            if ev.kind == "switch":
+                self.dead_switches[ev.id] = False
+                affected[:] = True
+                continue
+            c, pt = divmod(ev.id, p)
+            nb = int(nbrs[c, pt])
+            nbp = int(topo.nbr_port[c, pt])
+            if self.dead_ports[c, pt]:
+                up_pairs.append((c, nb))
+            self.dead_ports[c, pt] = False
+            self.dead_ports[nb, nbp] = False
+        if up_pairs and not affected.all():
+            cs = np.asarray([c for c, _ in up_pairs])
+            nbs = np.asarray([nb for _, nb in up_pairs])
+            affected |= (np.abs(d32[:, cs] - d32[:, nbs]) >= 2).any(axis=1)
+
+        valid = nbrs >= 0
+        nbr_safe = np.where(valid, nbrs, 0)
+        switch_up = ~self.dead_switches
+        link_up = (valid & ~self.dead_ports
+                   & switch_up[:, None] & switch_up[nbr_safe])
+
+        leaf_rows = np.nonzero(affected)[0].astype(np.int32)
+        k = len(leaf_rows)
+        w = (p + 31) // 32
+        if k == 0:
+            return TableDelta(leaf_rows,
+                              np.zeros((0, n), np.int16),
+                              np.zeros((0, n, w), np.uint32),
+                              np.zeros((0, n, w), np.uint32),
+                              link_up, switch_up)
+
+        # effective adjacency: dead ports and any port touching a dead
+        # switch become -1 (BFS only; the topology itself never mutates)
+        eff = nbrs.copy()
+        eff[self.dead_ports] = -1
+        eff[~switch_up] = -1
+        eff[valid & ~switch_up[nbr_safe]] = -1
+        newd = bfs_distances(topo, topo.leaf_ids[affected], nbrs=eff)
+        dist_rows = np.where(newd < 0, UNREACHABLE, newd).astype(np.int16)
+        self.dist_leaf[affected] = dist_rows
+
+        min_rows = np.empty((k, n, w), np.uint32)
+        away_rows = np.empty((k, n, w), np.uint32)
+        for lo in range(0, k, self.leaf_block):        # bounded scratch
+            hi = min(lo + self.leaf_block, k)
+            min_rows[lo:hi], away_rows[lo:hi] = _pack_mask_block(
+                dist_rows[lo:hi], nbrs, valid, nbr_safe)
+        if self.min_mask is not None:
+            self.min_mask[affected] = min_rows
+            self.away_mask[affected] = away_rows
+        return TableDelta(leaf_rows, dist_rows, min_rows, away_rows,
+                          link_up, switch_up)
+
 
 def _pack_mask_block(dist_block: np.ndarray, nbrs: np.ndarray,
                      valid: np.ndarray, nbr_safe: np.ndarray):
@@ -167,15 +353,14 @@ def _pack_mask_block(dist_block: np.ndarray, nbrs: np.ndarray,
     dn = d[:, nbr_safe]                                   # [B, N, P]
     toward = valid[None] & (dn == (d[:, :, None] - 1))
     away = valid[None] & (dn == (d[:, :, None] + 1))
-    b, n = d.shape
-    min_b = np.zeros((b, n, w), np.uint32)
-    away_b = np.zeros((b, n, w), np.uint32)
-    for j in range(p):
-        min_b[:, :, j // 32] |= (
-            toward[:, :, j].astype(np.uint32) << np.uint32(j % 32))
-        away_b[:, :, j // 32] |= (
-            away[:, :, j].astype(np.uint32) << np.uint32(j % 32))
-    return min_b, away_b
+    # one shot bit-pack: port j contributes bit j%32 of word j//32; the
+    # bits are distinct within a word, so the segmented sum IS the OR
+    shifts = np.uint32(1) << (np.arange(p, dtype=np.uint32) % np.uint32(32))
+    starts = np.arange(0, p, 32)
+    min_b = np.add.reduceat(toward * shifts, starts, axis=2)
+    away_b = np.add.reduceat(away * shifts, starts, axis=2)
+    return min_b.astype(np.uint32, copy=False), \
+        away_b.astype(np.uint32, copy=False)
 
 
 def iter_port_mask_blocks(dist_leaf: np.ndarray, nbrs: np.ndarray,

@@ -54,17 +54,62 @@ class StragglerDetector:
         is_straggler = (self.n > self.WARMUP
                         and dt > self.mean + self.cfg.straggler_z * sd)
         a = self.cfg.ema
+        # residual against the PRE-update mean: updating the mean first
+        # shrinks the residual by the blend factor and biases the
+        # variance EMA low, so slow-but-steady drift never widens sd
+        resid = dt - self.mean
         self.mean = a * self.mean + (1 - a) * dt
-        self.var = a * self.var + (1 - a) * (dt - self.mean) ** 2
+        self.var = a * self.var + (1 - a) * resid ** 2
         if is_straggler:
             self.flagged.append((step, dt))
         return is_straggler
 
 
+def schedule_fault_hook(sim, holder, *, slots_per_step: int = 1):
+    """Bridge a simulator :class:`repro.core.FailureSchedule` onto
+    :attr:`FaultTolerantRunner.fault_hook` — the documented injection
+    point for schedule-driven failures.
+
+    ``sim`` must be armed with a non-empty schedule and ``holder`` is a
+    one-element list carrying the live simulator state dict (the hook
+    replaces it in place, since ``update_tables`` donates).  Before the
+    runner executes step ``k``, every failure transition whose slot
+    falls at or before ``(k + 1) * slots_per_step`` is applied: routing
+    tables are delta-rebuilt on the host and scattered into the device
+    state, and under the ``drop`` policy packets stranded on dead
+    elements are freed.  The returned hook is what tests (and launchers)
+    pass as ``fault_hook=``.
+    """
+    if not getattr(sim, "has_failures", False):
+        raise ValueError("schedule_fault_hook needs a simulator armed "
+                         "with a non-empty FailureSchedule")
+    trans = sim.failures.transitions()
+    drop = sim.failures.policy == "drop"
+    cursor = [0]
+
+    def hook(step: int) -> None:
+        boundary = (step + 1) * slots_per_step
+        while cursor[0] < len(trans) and trans[cursor[0]][0] <= boundary:
+            _, downs, ups = trans[cursor[0]]
+            delta = sim.tables.apply_failures(down=downs, up=ups)
+            holder[0] = sim.update_tables(holder[0], delta)
+            if drop and downs:
+                holder[0] = sim.drop_dead_packets(holder[0])
+            cursor[0] += 1
+
+    return hook
+
+
 class FaultTolerantRunner:
     """Drives ``step_fn(state, batch) -> (state, metrics)`` with
     checkpoint-restart.  ``state`` is any pytree containing the trainable
-    state; ``batch_at(step)`` must be pure (counter-based pipeline)."""
+    state; ``batch_at(step)`` must be pure (counter-based pipeline).
+
+    ``fault_hook(step)`` runs *before* each step attempt and is the
+    injection point for failures: tests raise from it to exercise
+    restore, and :func:`schedule_fault_hook` adapts a simulator
+    :class:`repro.core.FailureSchedule` to it so link/switch failures
+    land on the training-step clock."""
 
     def __init__(self, step_fn: Callable, batch_at: Callable,
                  ckpt: Checkpointer, cfg: FTConfig = FTConfig(),

@@ -194,13 +194,39 @@ class Traffic:
                              f"expected one of {ARRIVAL_PATTERNS}")
 
 
+# Donated row scatters for in-place device-table updates: the old table
+# buffer is consumed and rewritten rather than double-buffered — at paper
+# scale the mask tables are the largest device arrays, so the delta path
+# must never hold two copies.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(table, rows, vals):
+    return table.at[rows].set(vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows_batch(table, rows, vals):
+    return table.at[:, rows].set(vals[None])
+
+
 class Simulator:
-    def __init__(self, tables: RoutingTables, cfg: SimConfig):
+    def __init__(self, tables: RoutingTables, cfg: SimConfig,
+                 failures=None):
         if cfg.backend not in BACKENDS:
             raise ValueError(f"unknown backend {cfg.backend!r}; "
                              f"expected one of {BACKENDS}")
         topo = tables.topo
         self.tables, self.cfg = tables, cfg
+        # failure machinery is a *static* branch: with no schedule (or an
+        # empty one) every step traces exactly as before — routing tables
+        # stay closure-captured constants and no live masks ride in the
+        # state, so the parity goldens are bitwise-untouched.  With a
+        # schedule, the tables move into the state (``tbl_min`` /
+        # ``tbl_away`` / ``tbl_dist`` + ``link_up`` / ``switch_up``) so
+        # ``update_tables`` can rewrite them mid-run without recompiling.
+        self.failures = failures
+        self.has_failures = failures is not None and len(failures.events) > 0
+        if failures is not None:
+            failures.validate(topo)
         self.N = topo.n_switches
         self.P = topo.max_ports
         self.V = cfg.vcs
@@ -266,7 +292,7 @@ class Simulator:
         minimal policies never read them, and a second [N1*N, W] device
         table is 100s of MB at paper scale.
         """
-        need_away = self.cfg.policy == "polarized"
+        need_away = self.cfg.policy in ("polarized", "degraded")
         mins, aways = [], []
         for _lo, _hi, min_b, away_b in tables.mask_blocks():
             mins.append(jnp.asarray(min_b.reshape(-1, self.W)))
@@ -405,6 +431,18 @@ class Simulator:
             "slot": Z(),
             "key": jax.random.PRNGKey(self.cfg.seed),
         }
+        if self.has_failures:
+            # routing tables ride in the (donated) state so update_tables
+            # can rewrite rows mid-run.  jnp.array copies — never aliases
+            # of the closure constants, which would be consumed with the
+            # first donated chunk.
+            st["tbl_min"] = jnp.array(self.min_mask)
+            if self.away_mask is not None:
+                st["tbl_away"] = jnp.array(self.away_mask)
+            st["tbl_dist"] = jnp.array(self.dist.reshape(-1))
+            st["link_up"] = jnp.array(self.valid_port.reshape(-1))
+            st["switch_up"] = jnp.ones(self.N, bool)
+            st["fail_drop"] = Z()
         st.update({k: jnp.asarray(v) for k, v in seed_arrays.items()})
         return st
 
@@ -599,14 +637,31 @@ class Simulator:
             if self.cfg.policy == "ugal":
                 sw = self.leaf_ids[src_lr]
                 occ0 = st["qlen"][self._ugal_occ_idx]             # [S,P]
-                def best(t_lr):
-                    m = self._port_bits(self.min_mask, t_lr, sw)
-                    return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
-                q_min = best(dst_lr)
-                q_val = best(mid_lr)
-                d_min = self.dist[dst_lr, sw]
-                d_val = self.dist[mid_lr, sw] + self.dist[dst_lr, self.leaf_ids[mid_lr]]
-                take_val = q_min * d_min > q_val * d_val
+                if self.has_failures:
+                    # state-resident tables + live-port gating; float32
+                    # products because UNREACHABLE distances would wrap
+                    # the int32 q*d score
+                    live_sw = st["link_up"].reshape(self.N, self.P)[sw]
+                    dflat = st["tbl_dist"]
+                    def best(t_lr):
+                        m = self._port_bits(st["tbl_min"], t_lr, sw) & live_sw
+                        return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
+                    q_min = best(dst_lr)
+                    q_val = best(mid_lr)
+                    d_min = dflat[dst_lr * self.N + sw]
+                    d_val = (dflat[mid_lr * self.N + sw]
+                             + dflat[dst_lr * self.N + self.leaf_ids[mid_lr]])
+                    take_val = (q_min.astype(jnp.float32) * d_min
+                                > q_val.astype(jnp.float32) * d_val)
+                else:
+                    def best(t_lr):
+                        m = self._port_bits(self.min_mask, t_lr, sw)
+                        return jnp.min(jnp.where(m, occ0, 1 << 20), axis=1)
+                    q_min = best(dst_lr)
+                    q_val = best(mid_lr)
+                    d_min = self.dist[dst_lr, sw]
+                    d_val = self.dist[mid_lr, sw] + self.dist[dst_lr, self.leaf_ids[mid_lr]]
+                    take_val = q_min * d_min > q_val * d_val
                 mid = jnp.where(take_val, mid_lr, -1)
             else:
                 mid = mid_lr
@@ -708,17 +763,30 @@ class Simulator:
         eject = valid & (cur == self.leaf_ids[t_lr])
         route = valid & ~eject
         pol = self.cfg.policy
+        hf = self.has_failures
+        if hf:
+            # live tables from the state; live_row gates every policy's
+            # candidate set to live ports (dead switches contribute
+            # all-dead rows, so their packets freeze until drop/restore)
+            tmin = st["tbl_min"]
+            taway = st.get("tbl_away")
+            dflat = st["tbl_dist"]
+            live_row = st["link_up"].reshape(N, P)[cur]            # [NR,P]
+        else:
+            tmin = self.min_mask
+            taway = self.away_mask
+            dflat = self.dist.reshape(-1)
+            live_row = None
         if pol == "polarized":
             # full Polarized classification from toward/away bits alone:
             # Forward = away-from-s & toward-t, Expansion = away & away
             # (while d_cs < d_ct), Contraction = toward & toward (once
             # d_cs >= d_ct); d(n,t) for the hop budget is d(c,t)+away-toward
             s_lr = sd >> 16
-            dn_t = self._port_bits(self.min_mask, t_lr, cur)
-            up_t = self._port_bits(self.away_mask, t_lr, cur)
-            dn_s = self._port_bits(self.min_mask, s_lr, cur)
-            up_s = self._port_bits(self.away_mask, s_lr, cur)
-            dflat = self.dist.reshape(-1)
+            dn_t = self._port_bits(tmin, t_lr, cur)
+            up_t = self._port_bits(taway, t_lr, cur)
+            dn_s = self._port_bits(tmin, s_lr, cur)
+            up_s = self._port_bits(taway, s_lr, cur)
             d_ct = dflat[t_lr * N + cur]
             d_cs = dflat[s_lr * N + cur]
             src_side = (d_cs < d_ct)[:, None]
@@ -728,18 +796,38 @@ class Simulator:
             budget_ok = (hops[:, None] + 1 + d_nt) <= self.cfg.max_hops
             allowed = (up_s & dn_t) | (deroute & budget_ok)
             next_vc = jnp.minimum(hops // 2, V - 1)
+        elif pol == "degraded":
+            # FatPaths-style layered recovery: minimal toward ports while
+            # any are live; when failures kill them all, fall back to live
+            # away ports (one layer up, +2 hops round trip) within the hop
+            # budget.  On a pristine fabric the fallback never fires, so
+            # degraded == minimal_adaptive bit for bit.
+            toward = self._port_bits(tmin, t_lr, cur)
+            away = self._port_bits(taway, t_lr, cur)
+            if hf:
+                toward = toward & live_row
+                away = away & live_row
+            d_ct = dflat[t_lr * N + cur]
+            no_min = ~jnp.any(toward, axis=1)
+            budget_ok = (hops[:, None] + 2 + d_ct[:, None]) <= self.cfg.max_hops
+            fallback = no_min[:, None] & away & budget_ok
+            deroute = fallback
+            allowed = toward | fallback
+            next_vc = jnp.minimum(hops // 2, V - 1)
         elif pol in ("minimal_adaptive", "ksp"):
-            allowed = self._port_bits(self.min_mask, t_lr, cur)
+            allowed = self._port_bits(tmin, t_lr, cur)
             deroute = jnp.zeros_like(allowed)
             next_vc = jnp.minimum(hops // 2, V - 1)
         elif pol in ("ugal", "valiant"):
             mid_lr = st["p_mid"][pkt0]
             tgt = jnp.where(mid_lr >= 0, mid_lr, t_lr)
-            allowed = self._port_bits(self.min_mask, tgt, cur)
+            allowed = self._port_bits(tmin, tgt, cur)
             deroute = jnp.zeros_like(allowed)
             next_vc = jnp.minimum(hops, V - 1)
         else:
             raise ValueError(pol)
+        if hf and pol != "degraded":   # degraded gated its layers above
+            allowed = allowed & live_row
 
         # congestion signal: local output queue + downstream input queue for
         # the flight VC.  Credit = room in the local output queue.  Both
@@ -863,6 +951,8 @@ class Simulator:
         nb = self.nbrs0[sw, pt]                                     # [N*P]
         nbp = self.nbr_port[sw, pt]
         link_ok = self.valid_port[sw, pt]
+        if self.has_failures:
+            link_ok = link_ok & st["link_up"]
         # downstream input queue per VC
         dq = (nb[:, None] * P + nbp[:, None]) * V + jnp.arange(V, dtype=jnp.int32)
         room = st["qlen"][dq] < Q                                   # [N*P,V]
@@ -1447,6 +1537,176 @@ class Simulator:
         st = self.run_chunk_batch(st, traffic, measure)
         m = jax.device_get({k: st[k] - base[k] for k in base})
         return {**self._serving_metrics(m, self.S, measure), "state": st}
+
+    # ------------------------------------------------------------------ #
+    # fault injection: live table updates + resilience driver
+    # ------------------------------------------------------------------ #
+    def update_tables(self, st, delta):
+        """Scatter a :class:`repro.core.routing.TableDelta` into the
+        state-resident device tables **in place** (donation-safe: the old
+        table buffers are consumed).  Works on scalar and batched states;
+        ``st`` is consumed — keep the returned dict.
+        """
+        if not self.has_failures:
+            raise RuntimeError(
+                "update_tables needs a Simulator built with a failure "
+                "schedule (failures=...)")
+        st = dict(st)
+        batched = st["ejected"].ndim == 1
+        n, w = self.N, self.W
+        link_up = jnp.asarray(delta.link_up.reshape(-1))
+        switch_up = jnp.asarray(delta.switch_up)
+        if batched:
+            r = st["ejected"].shape[0]
+            link_up = jnp.tile(link_up[None], (r, 1))
+            switch_up = jnp.tile(switch_up[None], (r, 1))
+        st["link_up"], st["switch_up"] = link_up, switch_up
+        k = delta.n_affected
+        if k:
+            rows = jnp.asarray(
+                (delta.leaf_rows.astype(np.int64)[:, None] * n
+                 + np.arange(n)[None, :]).reshape(-1).astype(np.int32))
+            scatter = _scatter_rows_batch if batched else _scatter_rows
+            with _quiet_cpu_donation():
+                st["tbl_min"] = scatter(
+                    st["tbl_min"], rows,
+                    jnp.asarray(delta.min_rows.reshape(k * n, w)))
+                if "tbl_away" in st:
+                    st["tbl_away"] = scatter(
+                        st["tbl_away"], rows,
+                        jnp.asarray(delta.away_rows.reshape(k * n, w)))
+                st["tbl_dist"] = scatter(
+                    st["tbl_dist"], rows,
+                    jnp.asarray(delta.dist_rows.reshape(-1)))
+        return st
+
+    def drop_dead_packets(self, st):
+        """Free every packet stranded on a dead element (the
+        ``policy="drop"`` schedule option): whole input+output queues of
+        dead switches and whole output queues feeding dead links — every
+        packet there is unreachable until restore, so the drop is exact.
+        Freed ids return to the free-list ring; ``fail_drop`` counts them.
+        Host-side surgery on a **scalar** state (called at failure slots,
+        never in the hot path)."""
+        if st["ejected"].ndim != 0:
+            raise ValueError("drop_dead_packets works on scalar states")
+        N, P, V = self.N, self.P, self.V
+        link_up = np.asarray(st["link_up"]).reshape(N, P)
+        switch_up = np.asarray(st["switch_up"])
+        # output queues die with their link (covers dead switches — all
+        # their links are down); input queues die only with their switch
+        # (packets already received at a live switch can still route out)
+        dead_out_q = np.repeat(~link_up.reshape(-1), V)            # [NQ]
+        dead_in_q = np.repeat(~switch_up, P * V)                   # [NQ]
+        freed = []
+
+        def clear(buf, head, ln, depth, dead):
+            rows = np.nonzero(dead & (ln > 0))[0]
+            for qi in rows:
+                idx = (head[qi] + np.arange(ln[qi])) % depth
+                freed.extend(int(x) for x in buf[qi, idx])
+                ln[qi] = 0
+            return ln
+
+        qlen = np.array(st["qlen"])
+        oq_len = np.array(st["oq_len"])
+        qlen = clear(np.asarray(st["qbuf"]), np.asarray(st["qhead"]),
+                     qlen, self.Q, dead_in_q)
+        oq_len = clear(np.asarray(st["oq_buf"]), np.asarray(st["oq_head"]),
+                       oq_len, self.cfg.out_queue, dead_out_q)
+        st = dict(st)
+        if freed:
+            fl_buf = np.array(st["fl_buf"])
+            head, ln = int(st["fl_head"]), int(st["fl_len"])
+            pos = (head + ln + np.arange(len(freed))) % self.pool
+            fl_buf[pos] = freed
+            st["fl_buf"] = jnp.asarray(fl_buf)
+            st["fl_len"] = jnp.asarray(ln + len(freed), jnp.int32)
+            st["fail_drop"] = st["fail_drop"] + jnp.int32(len(freed))
+        st["qlen"] = jnp.asarray(qlen)
+        st["oq_len"] = jnp.asarray(oq_len)
+        return st
+
+    def run_resilience(self, traffic: Traffic, warm: int = 200,
+                       measure: int = 400, seed: int = 0,
+                       chunk: int = 32) -> dict:
+        """Throughput + latency under the attached failure schedule.
+
+        Advances in ``chunk``-slot jitted runs plus single-slot remainder
+        steps (compile set = {chunk, 1}, independent of where events
+        land), applying each schedule transition at its slot boundary via
+        :meth:`RoutingTables.apply_failures` → :meth:`update_tables`
+        (+ :meth:`drop_dead_packets` under the ``"drop"`` policy).
+        Transitions at the warm boundary apply before the snapshot.  On
+        return the host tables are restored to pristine, so cached
+        simulators stay reusable (BFS is deterministic — restoration is
+        exact).
+        """
+        if not self.has_failures:
+            raise ValueError(
+                "run_resilience needs a Simulator built with a non-empty "
+                "FailureSchedule (failures=...); use run_throughput for "
+                "pristine fabrics")
+        sched = self.failures
+        drop = sched.policy == "drop"
+        trans = sched.transitions()
+        st = self.make_state(traffic, seed)
+        now = 0
+        ti = 0
+        active: list = []
+
+        def advance_to(st, target):
+            nonlocal now
+            while now + chunk <= target:
+                st = self.run_chunk(st, traffic, chunk)
+                now += chunk
+            while now < target:
+                st = self.run_chunk(st, traffic, 1)
+                now += 1
+            return st
+
+        def apply_due(st, boundary):
+            nonlocal ti
+            while ti < len(trans) and trans[ti][0] <= boundary:
+                slot, downs, ups = trans[ti]
+                st = advance_to(st, slot)
+                delta = self.tables.apply_failures(down=downs, up=ups)
+                st = self.update_tables(st, delta)
+                active.extend(downs)
+                for ev in ups:
+                    if ev in active:
+                        active.remove(ev)
+                if drop and downs:
+                    st = self.drop_dead_packets(st)
+                ti += 1
+            return st
+
+        try:
+            st = apply_due(st, warm)
+            st = advance_to(st, warm)
+            base = {k: st[k] + 0 for k in ("ejected", "hop_sum",
+                                           "pool_stall", "fail_drop",
+                                           "lat_hist")}
+            st = apply_due(st, warm + measure)
+            st = advance_to(st, warm + measure)
+            m = jax.device_get({k: st[k] - base[k] for k in base}
+                               | {"ejected_total": st["ejected"]})
+        finally:
+            if active or ti:
+                # exact pristine restore (BFS is deterministic), so the
+                # shared host tables are clean for the next caller
+                self.tables.apply_failures(up=tuple(active))
+        hist = np.asarray(m["lat_hist"])
+        return {
+            "throughput": int(m["ejected"]) / (self.S * measure),
+            "avg_hops": int(m["hop_sum"]) / max(int(m["ejected"]), 1),
+            "ejected": int(m["ejected_total"]),
+            "pool_stall": int(m["pool_stall"]),
+            "fail_drop": int(m["fail_drop"]),
+            "hist": hist,
+            **percentiles(hist, LATENCY_QS),
+            "state": st,
+        }
 
     def run_completion(self, traffic: Traffic, expected: int,
                        chunk: int = 128, max_slots: int = 100_000,

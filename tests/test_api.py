@@ -515,6 +515,35 @@ def test_estimate_memory_from_experiment_and_replicas():
             == est["tables"]["device_mask_bytes"])
 
 
+def test_estimate_memory_prices_failure_schedule_state():
+    """With a non-empty FailureSchedule the tables move into the state
+    (plus live up-masks and the drop counter); the estimator's add-on
+    must match the real armed state's extra array bytes exactly."""
+    import dataclasses
+    from repro.api import estimate_memory, FailureSchedule
+
+    topo = build_network(TINY)
+    sched = FailureSchedule.random_links(topo, 2, down_slot=10, seed=0)
+    tiny_f = dataclasses.replace(TINY, failures=sched)
+    est = estimate_memory(tiny_f, ROUTE)
+    est0 = estimate_memory(TINY, ROUTE)
+    assert est0["failures"] == {"armed": False,
+                                "state_bytes_per_replica": 0}
+    assert est["failures"]["armed"]
+    add_on = est["failures"]["state_bytes_per_replica"]
+    assert (est["state_bytes_per_replica"]
+            == est0["state_bytes_per_replica"] + add_on)
+
+    tb = build_tables(topo, masks="dense")
+    with Simulator(tb, ROUTE.to_sim_config(), failures=sched) as sim:
+        st = sim.make_state(Traffic("uniform", load=0.5), 0)
+        extra = ("tbl_min", "tbl_away", "tbl_dist", "link_up", "switch_up",
+                 "fail_drop")
+        assert set(extra) <= set(st)
+        actual = sum(np.asarray(st[k]).nbytes for k in extra)
+    assert add_on == actual
+
+
 def test_estimate_memory_resolves_blocked_layout_at_scale():
     """Above DENSE_MASK_LIMIT the estimator predicts the blocked layout
     and zero retained host-mask bytes — priced analytically, no tables
