@@ -15,14 +15,25 @@ Two phases, each in its own subprocess (clean cold-start, same method as
   0/1/2/5/10% of links down (one seeded ladder, failures landing in
   warmup).  The gated figure is throughput *retention* at the worst
   rate — the resilience headline.
+* ``curve_hot`` — the same ladder past the saturation knee (uniform at
+  loads 0.7 and 0.9): retention at load 0.5 mostly measures spare
+  capacity absorbing the reroutes; at 0.9 the fabric has none, so the
+  curve shows what degraded routing costs when every link matters.
+* ``curve_tornado`` — the ladder under the adversarial ``tornado``
+  permutation (leaf-level half-rotation, worst case for minimal paths)
+  with failures armed: failures concentrate on already-hot inter-leaf
+  links instead of averaging out.
 
 ``--out`` merges records into ``BENCH_faults.json`` under
-``rebuild.<fabric>`` / ``curves.<fabric>``, preserving committed
-sections; the committed file carries the three-family 1k curves
-(``mrls1k`` / ``fat_tree1k`` / ``dragonfly1k``) produced by running
-``--fabric <name> --out benchmarks/BENCH_faults.json`` for each.
-``--check BASELINE.json`` exits non-zero when either gated figure falls
-more than 20% below its committed value.
+``rebuild.<fabric>`` / ``curves.<fabric>`` / ``curves_hot.<fabric>`` /
+``curves_tornado.<fabric>``, preserving committed sections; the
+committed file carries the three-family 1k records (``mrls1k`` /
+``fat_tree1k`` / ``dragonfly1k``) produced by running ``--fabric <name>
+--out benchmarks/BENCH_faults.json`` for each.  ``--check
+BASELINE.json`` exits non-zero when a gated figure (rebuild ratio,
+retention at the worst rate for each curve family) falls more than 20%
+below its committed value; sections absent from the baseline are
+skipped, so gates arrive with their data.
 """
 import json
 import pathlib
@@ -43,6 +54,8 @@ FABRICS = {
 }
 RATES = (0.0, 0.01, 0.02, 0.05, 0.10)
 LOAD = 0.5
+HOT_LOADS = (0.7, 0.9)      # past the saturation knee
+TORNADO_LOAD = 0.5          # tornado saturates early; 0.5 is already hot
 WARM, MEASURE = 200, 400
 DOWN_SLOT = 10
 REGRESSION_TOLERANCE = 0.20
@@ -88,14 +101,15 @@ def phase_rebuild(fabric: str) -> dict:
             "affected_leaves": affected, "n_leaves": int(topo.n_leaves)}
 
 
-def phase_curve(fabric: str) -> dict:
+def _curve(fabric: str, pattern: str, load: float) -> dict:
     from repro.api import Experiment, RouteSpec, WorkloadSpec, degrade_sweep
 
     base = Experiment(
         network=_network(fabric),
         route=RouteSpec(policy="degraded", max_hops=12),
-        workload=WorkloadSpec("uniform", load=LOAD),
-        name=f"faults.{fabric}", seed=0, warm=WARM, measure=MEASURE)
+        workload=WorkloadSpec(pattern, load=load),
+        name=f"faults.{fabric}.{pattern}{load:g}", seed=0,
+        warm=WARM, measure=MEASURE)
     t0 = time.perf_counter()
     rec = degrade_sweep(base, RATES, down_slot=DOWN_SLOT, fail_seed=0)
     dt = time.perf_counter() - t0
@@ -106,7 +120,24 @@ def phase_curve(fabric: str) -> dict:
             "retention_worst": points[-1]["retention"]}
 
 
-PHASES = {"rebuild": phase_rebuild, "curve": phase_curve}
+def phase_curve(fabric: str) -> dict:
+    return _curve(fabric, "uniform", LOAD)
+
+
+def phase_curve_hot(fabric: str) -> dict:
+    return {"pattern": "uniform",
+            "loads": {f"{load:g}": _curve(fabric, "uniform", load)
+                      for load in HOT_LOADS}}
+
+
+def phase_curve_tornado(fabric: str) -> dict:
+    return {"pattern": "tornado", "load": TORNADO_LOAD,
+            **_curve(fabric, "tornado", TORNADO_LOAD)}
+
+
+PHASES = {"rebuild": phase_rebuild, "curve": phase_curve,
+          "curve_hot": phase_curve_hot,
+          "curve_tornado": phase_curve_tornado}
 
 
 def _child(phase: str, fabric: str):
@@ -125,6 +156,8 @@ def main(fabric: str, out_path, check_path):
     from benchmarks.common import emit
     reb = _spawn("rebuild", fabric)
     cur = _spawn("curve", fabric)
+    hot = _spawn("curve_hot", fabric)
+    tor = _spawn("curve_tornado", fabric)
     emit(f"bench_faults.{fabric}.rebuild_delta", reb["t"] * 1e6,
          f"{reb['ratio']:.1f}x faster than full "
          f"({reb['affected_leaves']}/{reb['n_leaves']} leaves)")
@@ -132,16 +165,23 @@ def main(fabric: str, out_path, check_path):
          f"{reb['links_down']} links down")
     emit(f"bench_faults.{fabric}.curve", cur["t"] * 1e6,
          f"retention@{RATES[-1]:g}={cur['retention_worst']:.3f}")
+    for load, c in sorted(hot["loads"].items()):
+        emit(f"bench_faults.{fabric}.curve_load{load}", c["t"] * 1e6,
+             f"retention@{RATES[-1]:g}={c['retention_worst']:.3f}")
+    emit(f"bench_faults.{fabric}.curve_tornado", tor["t"] * 1e6,
+         f"retention@{RATES[-1]:g}={tor['retention_worst']:.3f}")
 
     if out_path:
         doc = {}
         p = pathlib.Path(out_path)
         if p.exists():
             doc = json.loads(p.read_text())
+        meta = {"warm": WARM, "measure": MEASURE, "down_slot": DOWN_SLOT,
+                "rates": list(RATES)}
         doc.setdefault("rebuild", {})[fabric] = reb
-        doc.setdefault("curves", {})[fabric] = {
-            "load": LOAD, "warm": WARM, "measure": MEASURE,
-            "down_slot": DOWN_SLOT, "rates": list(RATES), **cur}
+        doc.setdefault("curves", {})[fabric] = {"load": LOAD, **meta, **cur}
+        doc.setdefault("curves_hot", {})[fabric] = {**meta, **hot}
+        doc.setdefault("curves_tornado", {})[fabric] = {**meta, **tor}
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
         print(f"wrote {p}")
@@ -159,17 +199,28 @@ def main(fabric: str, out_path, check_path):
                   f"rebuild ratio={reb['ratio']:.1f}x vs committed "
                   f"{ref['ratio']:.1f}x (floor {floor:.1f}x)")
             failed |= not ok
-        ref = base.get("curves", {}).get(fabric)
-        if ref is None:
-            print(f"no committed curve baseline for {fabric!r}; skipping")
-        else:
+
+        def _gate(label, got, ref):
+            nonlocal failed
+            if ref is None:
+                print(f"no committed {label} baseline for {fabric!r}; "
+                      "skipping")
+                return
             floor = (1 - REGRESSION_TOLERANCE) * ref["retention_worst"]
-            ok = cur["retention_worst"] >= floor
+            ok = got["retention_worst"] >= floor
             print(f"regression check [{'OK' if ok else 'REGRESSION'}]: "
-                  f"retention@{RATES[-1]:g}={cur['retention_worst']:.3f} vs "
-                  f"committed {ref['retention_worst']:.3f} "
-                  f"(floor {floor:.3f})")
+                  f"{label} retention@{RATES[-1]:g}="
+                  f"{got['retention_worst']:.3f} vs committed "
+                  f"{ref['retention_worst']:.3f} (floor {floor:.3f})")
             failed |= not ok
+
+        _gate("curve", cur, base.get("curves", {}).get(fabric))
+        hot_ref = base.get("curves_hot", {}).get(fabric)
+        for load, c in sorted(hot["loads"].items()):
+            _gate(f"curve@load{load}", c,
+                  (hot_ref or {}).get("loads", {}).get(load))
+        _gate("curve_tornado", tor,
+              base.get("curves_tornado", {}).get(fabric))
         if failed:
             sys.exit(1)
 

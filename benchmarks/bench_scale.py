@@ -24,6 +24,23 @@ ratio: it catches scheduler/blocked-table overhead regressions, while raw
 step-speed regressions are ``bench_step.py``'s job.  Gate tolerance 20%
 below the committed baseline's ratio, per (size, family).
 
+Each record also carries ``compile_ram_multiplier`` — the measured
+``(peak_rss - process baseline) / est_total`` ratio that
+:mod:`repro.api.admission` reads back to predict real peak RSS before
+compiling (only at-scale records, >= 1000 endpoints, feed predictions;
+tiny points are baseline-dominated but recorded for completeness).
+
+``--supervised`` runs every point's child under
+:class:`repro.runtime.supervisor.Supervisor`: admission preflight
+(predicted bytes vs host RAM), peak-RSS polling, wall-clock watchdog,
+and retry-with-backoff.  The child then checkpoints its completion run
+(``repro.runtime.resilient``) into a scratch directory, so a killed
+worker *resumes* rather than restarts — ``--inject-kill S`` SIGKILLs the
+first point's first attempt after ``S`` seconds to prove that path in
+CI.  Points are salvaged individually: a failed (size, family) records
+an ``error`` entry and the merged ``--out`` file is rewritten after
+every point, so a crash late in a ladder keeps the finished points.
+
 CI runs ``--sizes tiny`` against the committed ``BENCH_scale.json``; the
 big sizes are driven by hand / nightly (``--sizes 1k,10k,50k,100k``).
 Acceptance for ISSUE 5 was validated with ``--sizes 50k --families
@@ -74,7 +91,8 @@ def _find(spec_path, size: str, family: str) -> dict:
 # ---------------------------------------------------------------------- #
 # child: one measurement in a clean subprocess
 # ---------------------------------------------------------------------- #
-def _child(spec_path, size: str, family: str):
+def _child(spec_path, size: str, family: str, ckpt_dir=None,
+           result_out=None):
     import jax
     from repro.api import Experiment, estimate_memory
     from repro.api.runner import routing_tables
@@ -121,18 +139,35 @@ def _child(spec_path, size: str, family: str):
     out["pattern_slots_per_sec"] = n_slots / best["pattern"]
     out["program_slots_per_sec"] = n_slots / best["program"]
     # the headline metric: one cold completion run (compile included in
-    # wall_seconds — it is the honest cost of the scenario)
+    # wall_seconds — it is the honest cost of the scenario).  With a
+    # --ckpt dir the run goes through the resumable driver: a supervised
+    # retry picks up the latest snapshot instead of restarting, bitwise.
     t0 = time.perf_counter()
-    r = sim.run_program(cp, chunk=exp.chunk, max_slots=exp.max_slots,
-                        seed=exp.seed)
+    if ckpt_dir:
+        from repro.runtime.resilient import (ResilientConfig,
+                                             run_program_resumable)
+        r = run_program_resumable(sim, cp, ckpt=ckpt_dir, chunk=exp.chunk,
+                                  max_slots=exp.max_slots, seed=exp.seed,
+                                  config=ResilientConfig(every=1))
+    else:
+        r = sim.run_program(cp, chunk=exp.chunk, max_slots=exp.max_slots,
+                            seed=exp.seed)
     out["completion"] = {
         "slots": int(r["slots"]), "completed": bool(r["completed"]),
         "pool_stall": int(r["pool_stall"]),
         "wall_seconds": time.perf_counter() - t0,
     }
+    if ckpt_dir:
+        out["completion"]["resumed_from"] = r["resumed_from"]
+        out["completion"]["segments"] = r["segments"]
     out["peak_rss_bytes"] = resource.getrusage(
         resource.RUSAGE_SELF).ru_maxrss * 1024
-    print(json.dumps(out))
+    blob = json.dumps(out)
+    if result_out:
+        tmp = result_out + ".tmp"
+        pathlib.Path(tmp).write_text(blob)
+        pathlib.Path(tmp).rename(result_out)
+    print(blob)
 
 
 def _spawn(spec_path, size: str, family: str) -> dict:
@@ -144,14 +179,84 @@ def _spawn(spec_path, size: str, family: str) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+def _spawn_supervised(spec_path, size: str, family: str,
+                      inject_kill=None) -> dict:
+    """One point under the supervisor: admission preflight, RSS budget =
+    host RAM, kill-and-resume retries against the child's checkpoint
+    directory.  ``inject_kill`` SIGKILLs the first attempt after that
+    many seconds (chaos for CI)."""
+    import tempfile
+    from repro.api import Experiment, estimate_memory
+    from repro.api.admission import (compile_ram_multiplier, host_ram_bytes,
+                                     predict_peak_rss)
+    from repro.runtime.fault_tolerance import BackoffPolicy
+    from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+    exp = Experiment.from_dict(_find(spec_path, size, family))
+    est = estimate_memory(exp)
+    mult = compile_ram_multiplier(exp.network.family)
+    predicted = predict_peak_rss(est["total_bytes"], mult)
+    ram = host_ram_bytes()
+    work = tempfile.mkdtemp(prefix=f"bench_scale_{size}_{family}_")
+    result_path = str(pathlib.Path(work) / "result.json")
+    ckpt = str(pathlib.Path(work) / "ckpt")
+    argv = [sys.executable, str(pathlib.Path(__file__).resolve()),
+            "--child", "--sizes", size, "--families", family,
+            "--spec", str(spec_path), "--ckpt", ckpt,
+            "--result-out", result_path]
+    sup = Supervisor(SupervisorConfig(
+        rss_budget_bytes=ram, max_retries=3, inject_kill_s=inject_kill,
+        backoff=BackoffPolicy(base_s=0.5, cap_s=5.0)))
+    res = sup.run(argv, cwd=str(_ROOT), predicted_bytes=predicted)
+    if not res.ok:
+        kinds = [a.killed or f"rc={a.returncode}" for a in res.attempts]
+        raise RuntimeError(
+            f"supervised {size}.{family} failed after "
+            f"{len(res.attempts)} attempts ({', '.join(kinds)})")
+    m = json.loads(pathlib.Path(result_path).read_text())
+    m["supervised"] = res.to_dict()
+    return m
+
+
 # ---------------------------------------------------------------------- #
-def main(spec_path, sizes, families, out_path, check_path):
+def _write_merged(out_path, doc):
+    p = pathlib.Path(out_path)
+    merged = json.loads(p.read_text()) if p.exists() else {}
+    for size, fams in doc.items():
+        merged.setdefault(size, {}).update(fams)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(merged, indent=1, sort_keys=True) + "\n")
+    return p
+
+
+def main(spec_path, sizes, families, out_path, check_path,
+         supervised=False, inject_kill=None):
     from benchmarks.common import emit
+    from repro.api.admission import BASELINE_RSS_BYTES
     doc = {}
+    broken = []
+    first_point = True
     for size in sizes:
-        doc[size] = {}
+        doc.setdefault(size, {})
         for family in families:
-            m = _spawn(spec_path, size, family)
+            try:
+                if supervised:
+                    m = _spawn_supervised(
+                        spec_path, size, family,
+                        inject_kill=inject_kill if first_point else None)
+                else:
+                    m = _spawn(spec_path, size, family)
+            except Exception as e:
+                # salvage: record the failure, keep every finished point
+                print(f"POINT FAILED {size}.{family}: {e}",
+                      file=sys.stderr)
+                broken.append(f"{size}.{family}")
+                doc[size][family] = {"error": str(e)}
+                if out_path:
+                    _write_merged(out_path, doc)
+                first_point = False
+                continue
+            first_point = False
             rec = {
                 "n_endpoints": m["n_endpoints"],
                 "n_switches": m["n_switches"],
@@ -164,9 +269,19 @@ def main(spec_path, sizes, families, out_path, check_path):
                 "peak_rss_bytes": m["peak_rss_bytes"],
                 "est_total_bytes": m["est_total_bytes"],
                 "est_peak_bytes": m["est_peak_bytes"],
+                # measured compile-RAM blowup: what admission control
+                # reads back (baseline-dominated below ~1000 endpoints —
+                # recorded anyway, the predictor filters by scale)
+                "compile_ram_multiplier": (
+                    max(m["peak_rss_bytes"] - BASELINE_RSS_BYTES, 0)
+                    / m["est_total_bytes"]),
                 "build_seconds": m["build_seconds"],
             }
+            if "supervised" in m:
+                rec["supervised"] = m["supervised"]
             doc[size][family] = rec
+            if out_path:
+                _write_merged(out_path, doc)   # salvage point by point
             emit(f"bench_scale.{size}.{family}.pattern",
                  1e6 / rec["pattern_slots_per_sec"],
                  f"{rec['pattern_slots_per_sec']:.1f} slots/s")
@@ -179,22 +294,20 @@ def main(spec_path, sizes, families, out_path, check_path):
                  f"{c['slots']} slots in {c['wall_seconds']:.1f}s "
                  f"completed={c['completed']} "
                  f"peak_rss={rec['peak_rss_bytes'] / 2**20:.0f}MiB "
-                 f"(est {rec['est_peak_bytes'] / 2**20:.0f}MiB)")
+                 f"(est {rec['est_peak_bytes'] / 2**20:.0f}MiB)"
+                 + (f" retries={rec['supervised']['retries']}"
+                    if "supervised" in rec else ""))
 
     if out_path:
-        p = pathlib.Path(out_path)
-        merged = json.loads(p.read_text()) if p.exists() else {}
-        for size, fams in doc.items():
-            merged.setdefault(size, {}).update(fams)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(merged, indent=1, sort_keys=True) + "\n")
-        print(f"wrote {p}")
+        print(f"wrote {_write_merged(out_path, doc)}")
 
     if check_path:
         base = json.loads(pathlib.Path(check_path).read_text())
         failures = []
         for size, fams in doc.items():
             for family, rec in fams.items():
+                if "error" in rec:
+                    continue   # already in `broken`
                 ref = base.get(size, {}).get(family)
                 if ref is None:
                     print(f"no committed baseline for {size}.{family}; "
@@ -213,6 +326,10 @@ def main(spec_path, sizes, families, out_path, check_path):
         if failures:
             sys.exit(f"bench_scale regression in: {', '.join(failures)}")
 
+    if broken:
+        sys.exit(f"bench_scale points failed: {', '.join(broken)} "
+                 "(finished points were salvaged to --out)")
+
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
@@ -225,7 +342,12 @@ if __name__ == "__main__":
     _sizes = SIZES if _sizes == "all" else tuple(_sizes.split(","))
     _families = tuple(_opt("--families", ",".join(FAMILIES)).split(","))
     if "--child" in argv:
-        _child(_spec, _sizes[0], _families[0])
+        _child(_spec, _sizes[0], _families[0],
+               ckpt_dir=_opt("--ckpt", None),
+               result_out=_opt("--result-out", None))
     else:
+        _kill = _opt("--inject-kill", None)
         main(_spec, _sizes, _families, _opt("--out", None),
-             _opt("--check", None))
+             _opt("--check", None),
+             supervised="--supervised" in argv,
+             inject_kill=float(_kill) if _kill is not None else None)

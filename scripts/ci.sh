@@ -36,6 +36,12 @@ if [ "$LANE" = "pr" ]; then
     python -m repro.api degrade examples/specs/tiny_faults.json \
         --out artifacts/tiny_degrade.json
 
+    echo "== smoke: kill-resume parity (SIGKILL mid-run, resume, compare) =="
+    # supervised child runs the tiny all2all through run_resumable, gets
+    # SIGKILLed a few seconds in, resumes from the snapshot, and the final
+    # Result must be identical to an uninterrupted repro.api.run
+    python scripts/kill_resume_smoke.py
+
     echo "CI OK (pr lane)"
     exit 0
 elif [ "$LANE" != "full" ]; then
@@ -98,6 +104,14 @@ echo "== bench: extreme-scale headline sweep (tiny points) =="
 # measurement, so the gate is host-speed independent)
 python benchmarks/bench_scale.py --sizes tiny \
     --out artifacts/BENCH_scale.json --check benchmarks/BENCH_scale.json
+
+echo "== bench: supervised scale point with injected SIGKILL =="
+# the same tiny point under the worker supervisor: admission preflight,
+# RSS budget = host RAM, SIGKILL injected 8s into the first attempt —
+# the retry must resume the checkpointed completion run and finish
+python benchmarks/bench_scale.py --sizes tiny --families mrls \
+    --supervised --inject-kill 8 \
+    --out artifacts/BENCH_scale_supervised.json
 
 echo "== bench: fault injection (delta rebuild + degradation curve) =="
 # emits artifacts/BENCH_faults.json and fails if the delta-vs-full

@@ -27,6 +27,10 @@ from .registry import (register_topology, topology_families, build_network,
 from .runner import (Result, SimulatorCache, open_simulator, routing_tables,
                      run, run_all)
 from .memory import estimate_memory, format_bytes
+from .admission import (AdmissionDecision, AdmissionError, check_admission,
+                        compile_ram_multiplier, host_ram_bytes,
+                        predict_peak_rss)
+from .resume import resume, run_resumable
 from .sweep import expand_axes, sweep
 from .degrade import degrade_sweep, degrade_sweep_from_dict
 from ..core.failures import FailureEvent, FailureSchedule
@@ -39,6 +43,9 @@ __all__ = [
     "Result", "SimulatorCache", "open_simulator", "routing_tables", "run",
     "run_all",
     "estimate_memory", "format_bytes",
+    "AdmissionDecision", "AdmissionError", "check_admission",
+    "compile_ram_multiplier", "host_ram_bytes", "predict_peak_rss",
+    "resume", "run_resumable",
     "expand_axes", "sweep",
     "degrade_sweep", "degrade_sweep_from_dict",
     "FailureEvent", "FailureSchedule",

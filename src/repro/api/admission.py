@@ -1,0 +1,241 @@
+"""Admission control: refuse (or downgrade) before compiling, not OOM after.
+
+:func:`repro.api.estimate_memory` prices the *resident* simulation data
+exactly, but XLA's compile-time memory dominates at scale — the 50k-MRLS
+benchmark point measured ~15x the resident estimate at peak
+(``benchmarks/BENCH_scale.json``).  This module closes that gap with an
+**empirical compile-RAM multiplier**: recorded per (family, scale) by
+``bench_scale.py`` next to each measured ``peak_rss_bytes``, and read
+back here to predict a run's true peak::
+
+    predicted = BASELINE_RSS_BYTES + multiplier * est["total_bytes"]
+
+``check_admission(experiment)`` runs inside :func:`repro.api.run` /
+``sweep`` (mode from ``REPRO_ADMISSION``: ``auto`` | ``warn`` | ``off``)
+before any simulator is built:
+
+* fits the budget — admit unchanged;
+* over budget but the dense mask layout is the marginal cost — admit
+  **downgraded** to ``masks="blocked"`` (identical results word for
+  word; the layout only trades residency for bandwidth);
+* still over — raise :class:`AdmissionError` with the actionable
+  alternatives (smaller ``chunk``, switch-axis sharding, fewer replicas,
+  a bigger host) instead of letting the kernel OOM-kill the host.
+
+Decisions are memoized per (network, route, replicas): a sweep over
+loads/seeds on one fabric prices admission once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Optional, Tuple, Union
+
+from .memory import estimate_memory, format_bytes
+from .specs import Experiment
+
+__all__ = ["AdmissionError", "AdmissionDecision", "BASELINE_RSS_BYTES",
+           "DEFAULT_COMPILE_MULT", "host_ram_bytes",
+           "compile_ram_multiplier", "predict_peak_rss", "check_admission"]
+
+# process baseline (python + jax + XLA runtime) measured on the benchmark
+# host: tiny fabrics with ~350 KB of simulation data sit at ~540 MB RSS
+# (BENCH_scale.json "tiny"), so the baseline — not the fabric — is the
+# floor every prediction starts from
+BASELINE_RSS_BYTES = 512 << 20
+
+# fallback compile-RAM multiplier when no at-scale record matches: the
+# 50k-MRLS point measured (6.37 GiB - baseline) / 432 MiB ~ 13.9; rounded
+# up for safety margin
+DEFAULT_COMPILE_MULT = 15.0
+
+# records below this endpoint count are baseline-dominated (the measured
+# RSS is mostly the python/jax runtime, not the fabric) and would produce
+# garbage multipliers
+_MIN_RECORD_ENDPOINTS = 1000
+
+_BENCH_SCALE = Path(__file__).resolve().parents[3] / "benchmarks" \
+    / "BENCH_scale.json"
+
+
+class AdmissionError(RuntimeError):
+    """Predicted peak memory exceeds the budget and no safe downgrade
+    closes the gap; the experiment was refused before compilation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    action: str                  # "admit" | "downgrade" | "refuse" | "off"
+    predicted_bytes: int         # resident estimate + predicted compile RAM
+    resident_bytes: int          # estimate_memory total (after downgrade)
+    budget_bytes: Optional[int]
+    compile_mult: float
+    masks: str = "auto"          # mask layout to build tables with
+    reason: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def host_ram_bytes() -> Optional[int]:
+    """MemTotal from ``/proc/meminfo`` (None on non-Linux hosts)."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemTotal:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return None
+
+
+def _load_records(records: Union[None, str, Path, dict]) -> dict:
+    if isinstance(records, dict):
+        return records
+    path = Path(records) if records is not None else _BENCH_SCALE
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _iter_points(records: dict):
+    for size, families in records.items():
+        if not isinstance(families, dict):
+            continue
+        for family, rec in families.items():
+            if isinstance(rec, dict):
+                yield family, rec
+
+
+def compile_ram_multiplier(family: Optional[str] = None,
+                           records: Union[None, str, Path, dict] = None
+                           ) -> float:
+    """Empirical peak-RSS / resident-estimate multiplier.
+
+    Scans ``BENCH_scale.json`` records with ``peak_rss_bytes`` +
+    ``est_total_bytes`` and at least 1000 endpoints (smaller points are
+    baseline-dominated), preferring the largest same-``family`` point,
+    then the largest point overall; falls back to
+    :data:`DEFAULT_COMPILE_MULT`.  Records that carry an explicit
+    ``compile_ram_multiplier`` field use it directly.
+    """
+    best: Tuple[int, float, bool] = (0, DEFAULT_COMPILE_MULT, False)
+    for fam, rec in _iter_points(_load_records(records)):
+        n = rec.get("n_endpoints", 0)
+        if n < _MIN_RECORD_ENDPOINTS:
+            continue
+        mult = rec.get("compile_ram_multiplier")
+        if mult is None:
+            peak, est = rec.get("peak_rss_bytes"), rec.get("est_total_bytes")
+            if not peak or not est:
+                continue
+            mult = max(peak - BASELINE_RSS_BYTES, 0) / est
+        same = family is not None and fam == family
+        # same-family records always beat cross-family ones; within a
+        # bucket the largest scale wins (closest to the compile regime)
+        if (same, n) > (best[2], best[0]):
+            best = (n, float(mult), same)
+    return best[1]
+
+
+def predict_peak_rss(resident_bytes: int, mult: float) -> int:
+    """Predicted process peak RSS for a run whose resident simulation
+    data totals ``resident_bytes``."""
+    return int(BASELINE_RSS_BYTES + mult * resident_bytes)
+
+
+def _mode() -> str:
+    mode = os.environ.get("REPRO_ADMISSION", "auto").lower()
+    if mode not in ("auto", "warn", "off"):
+        raise ValueError(f"REPRO_ADMISSION={mode!r} (expected auto|warn|off)")
+    return mode
+
+
+_memo: dict = {}
+
+
+def check_admission(experiment: Experiment, *,
+                    budget_bytes: Optional[int] = None,
+                    mode: Optional[str] = None,
+                    records: Union[None, str, Path, dict] = None
+                    ) -> AdmissionDecision:
+    """Price ``experiment`` against the host budget before compiling.
+
+    ``budget_bytes`` defaults to host RAM; ``mode`` defaults to the
+    ``REPRO_ADMISSION`` env var (``auto``).  Returns the decision (whose
+    ``masks`` field feeds the table build); raises
+    :class:`AdmissionError` in ``auto`` mode when even the blocked-mask
+    downgrade cannot fit.
+    """
+    mode = mode if mode is not None else _mode()
+    if mode == "off":
+        return AdmissionDecision(True, "off", 0, 0, None, 0.0)
+    if budget_bytes is None:
+        budget_bytes = host_ram_bytes()
+    key = (experiment.network, experiment.route, experiment.replicas,
+           budget_bytes, mode, id(records) if isinstance(records, dict)
+           else records)
+    hit = _memo.get(key)
+    if hit is not None:
+        if isinstance(hit, AdmissionError):
+            raise hit
+        return hit
+    decision = _decide(experiment, budget_bytes, mode, records)
+    if isinstance(decision, AdmissionError):
+        _memo[key] = decision
+        raise decision
+    _memo[key] = decision
+    return decision
+
+
+def _decide(experiment: Experiment, budget_bytes: Optional[int], mode: str,
+            records) -> Union[AdmissionDecision, AdmissionError]:
+    est = estimate_memory(experiment)
+    mult = compile_ram_multiplier(experiment.network.family, records)
+    resident = est["total_bytes"]
+    predicted = predict_peak_rss(resident, mult)
+    if budget_bytes is None or predicted <= budget_bytes:
+        return AdmissionDecision(True, "admit", predicted, resident,
+                                 budget_bytes, mult)
+
+    # blocked masks drop the host dense twins AND (for single-mask
+    # policies) keep only the streamed device copy resident per block;
+    # results are identical word for word, so this downgrade is safe
+    host_masks = est["tables"]["host_mask_bytes"]
+    down_resident = resident - host_masks
+    down_predicted = predict_peak_rss(down_resident, mult)
+    layout = est["tables"]["mask_layout"]
+    if layout == "dense" and down_predicted <= budget_bytes:
+        reason = (f"predicted peak {format_bytes(predicted)} over budget "
+                  f"{format_bytes(budget_bytes)}; downgraded to "
+                  f"masks='blocked' (drops {format_bytes(host_masks)} of "
+                  f"host dense masks, predicted "
+                  f"{format_bytes(down_predicted)})")
+        if mode == "warn":
+            print(f"[admission] WARNING: {reason}")
+            return AdmissionDecision(True, "admit", predicted, resident,
+                                     budget_bytes, mult, reason=reason)
+        return AdmissionDecision(True, "downgrade", down_predicted,
+                                 down_resident, budget_bytes, mult,
+                                 masks="blocked", reason=reason)
+
+    reason = (
+        f"experiment {experiment.label()!r} predicts peak RSS "
+        f"{format_bytes(predicted)} (resident {format_bytes(resident)} x "
+        f"compile multiplier {mult:.1f} + {format_bytes(BASELINE_RSS_BYTES)}"
+        f" baseline) but the budget is {format_bytes(budget_bytes)}. "
+        "Options: fewer replicas (state is priced per replica), a smaller "
+        "`chunk` (shorter scanned step program for XLA to optimize), "
+        "switch-axis sharding across hosts (`repro.parallel.sharding`), "
+        "masks='blocked' at build time, or a larger-memory host. "
+        "Set REPRO_ADMISSION=warn to proceed anyway at your own risk.")
+    if mode == "warn":
+        print(f"[admission] WARNING: {reason}")
+        return AdmissionDecision(True, "admit", predicted, resident,
+                                 budget_bytes, mult, reason=reason)
+    return AdmissionError(reason)

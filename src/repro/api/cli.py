@@ -6,7 +6,14 @@ Commands:
   holds one experiment object or ``{"experiments": [...]}``; simulators
   are shared across experiments on the same fabric.  ``--replicas R``
   overrides every experiment's ``replicas`` (one vmapped batched run over
-  R seeds instead of R sequential runs).
+  R seeds instead of R sequential runs).  ``--ckpt-dir DIR`` runs a
+  single-experiment spec through the resumable runtime
+  (:mod:`repro.runtime.resilient`): engine state snapshots at every
+  ``--ckpt-every`` chunk/slot boundary, and re-running the same command
+  after a kill resumes bitwise from the latest snapshot.
+* ``resume <ckpt_dir>`` — continue (or just report) the run stored in a
+  ``--ckpt-dir`` directory, from its saved spec and latest snapshot; a
+  completed run prints its stored Result without recomputation.
 * ``sweep <spec.json> [--replicas R] [--out results.json]`` — spec file
   holds ``{"base": <experiment>, "axes": {"workload.load": [...], ...}}``;
   a seed-only axis is folded into one batched run per remaining grid point.
@@ -24,7 +31,9 @@ Commands:
 * ``estimate <spec.json> [--out est.json]`` — price every experiment's
   memory footprint (routing tables, per-replica state, transients) via
   :func:`repro.api.estimate_memory` *without* running anything — the
-  pre-flight check for extreme-scale fabrics.
+  pre-flight check for extreme-scale fabrics.  Each line also prints the
+  predicted process peak (resident + empirical compile-RAM multiplier
+  from ``BENCH_scale.json``) and warns when it exceeds host RAM.
 * ``families`` — list registered topology families.
 * ``patterns`` — list the workload-pattern registry (Bernoulli families,
   collectives, and which collectives compile to device-resident programs).
@@ -98,8 +107,24 @@ def _cmd_run(args) -> int:
     exps = [Experiment.from_dict(d) for d in specs]
     if args.replicas is not None:
         exps = [e.override("replicas", args.replicas) for e in exps]
-    results = run_all(exps)
+    if args.ckpt_dir is not None:
+        from .resume import run_resumable
+        if len(exps) != 1:
+            print("--ckpt-dir needs a single-experiment spec "
+                  f"(got {len(exps)})", file=sys.stderr)
+            return 2
+        results = [run_resumable(exps[0], args.ckpt_dir,
+                                 every=args.ckpt_every)]
+    else:
+        results = run_all(exps)
     _emit(results, args.out)
+    return 0
+
+
+def _cmd_resume(args) -> int:
+    from .resume import resume
+    res = resume(args.ckpt_dir, every=args.ckpt_every)
+    _emit([res], args.out)
     return 0
 
 
@@ -178,17 +203,31 @@ def _cmd_estimate(args) -> int:
     exps = [Experiment.from_dict(d) for d in specs]
     if args.replicas is not None:
         exps = [e.override("replicas", args.replicas) for e in exps]
+    from .admission import (compile_ram_multiplier, host_ram_bytes,
+                            predict_peak_rss)
+    ram = host_ram_bytes()
     records = []
     for e in exps:
         est = estimate_memory(e)
+        mult = compile_ram_multiplier(e.network.family)
+        predicted = predict_peak_rss(est["total_bytes"], mult)
+        est["compile_ram_multiplier"] = mult
+        est["predicted_peak_rss_bytes"] = predicted
         records.append({"name": e.label(), **est})
         dims = est["dims"]
+        over = (ram is not None and predicted > ram)
         print(f"{e.label()}  S={dims['n_endpoints']}  "
               f"masks={est['tables']['mask_layout']}  "
               f"tables={format_bytes(est['tables']['device_mask_bytes'] + est['tables']['dist_leaf_bytes'])}  "
               f"state/replica={format_bytes(est['state_bytes_per_replica'])}  "
               f"total={format_bytes(est['total_bytes'])}  "
-              f"peak={format_bytes(est['peak_bytes'])}")
+              f"peak={format_bytes(est['peak_bytes'])}  "
+              f"predicted_rss={format_bytes(predicted)} "
+              f"(x{mult:.1f} compile)"
+              + (f"  ** OVER host RAM {format_bytes(ram)} — admission "
+                 "would refuse or downgrade **" if over else ""))
+    if ram is not None:
+        print(f"host RAM: {format_bytes(ram)}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(records, f, indent=2)
@@ -221,7 +260,23 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_run.add_argument("--replicas", type=int, default=None,
                        help="override replicas (>= 1): one vmapped batched "
                             "run over R seeds per experiment")
+    p_run.add_argument("--ckpt-dir", default=None,
+                       help="checkpoint directory: run resumably, "
+                            "snapshotting engine state at segment "
+                            "boundaries (single-experiment specs only)")
+    p_run.add_argument("--ckpt-every", type=int, default=64,
+                       help="segment length between checkpoints, in engine "
+                            "chunks (completion) or slots (windowed "
+                            "metrics); default 64")
     p_run.set_defaults(fn=_cmd_run)
+
+    p_res = sub.add_parser(
+        "resume", help="resume a --ckpt-dir run from its latest snapshot")
+    p_res.add_argument("ckpt_dir", help="checkpoint directory of the run")
+    p_res.add_argument("--out", help="write the full Result JSON here")
+    p_res.add_argument("--ckpt-every", type=int, default=64,
+                       help="segment length for the continued run")
+    p_res.set_defaults(fn=_cmd_resume)
 
     p_sweep = sub.add_parser("sweep", help="run a {base, axes} sweep spec")
     p_sweep.add_argument("spec", help="path to the sweep JSON file")

@@ -139,13 +139,26 @@ class Result:
 # ---------------------------------------------------------------------- #
 # simulator lifetime
 # ---------------------------------------------------------------------- #
-def _make_simulator(network: NetworkSpec, route: RouteSpec) -> Simulator:
+def _make_simulator(network: NetworkSpec, route: RouteSpec,
+                    masks: str = "auto") -> Simulator:
     topo = build_network(network)
     if network.failures is not None:
         network.failures.validate(topo)   # fail before the table build
-    tables = build_tables(topo)
+    tables = build_tables(topo, masks=masks)
     return Simulator(tables, route.to_sim_config(),
                      failures=network.failures)
+
+
+def _admitted_masks(experiment: Experiment) -> str:
+    """Admission-control gate for every ``run``/``run_all`` entry: price
+    the experiment (resident estimate x empirical compile-RAM multiplier)
+    against host RAM *before* building anything, and return the mask
+    layout to build tables with (``"blocked"`` when admission downgraded
+    a dense layout to fit).  Raises :class:`repro.api.admission.
+    AdmissionError` with actionable alternatives when nothing fits;
+    ``REPRO_ADMISSION=warn|off`` relaxes the gate."""
+    from .admission import check_admission
+    return check_admission(experiment).masks
 
 
 class SimulatorCache:
@@ -160,17 +173,19 @@ class SimulatorCache:
     def __init__(self):
         self._sims: dict = {}
 
-    def get(self, network: NetworkSpec, route: RouteSpec) -> Simulator:
-        key = (network, route)
+    def get(self, network: NetworkSpec, route: RouteSpec,
+            masks: str = "auto") -> Simulator:
+        key = (network, route, masks)
         sim = self._sims.get(key)
         if sim is None:
-            sim = self._sims[key] = _make_simulator(network, route)
+            sim = self._sims[key] = _make_simulator(network, route, masks)
         return sim
 
     def __len__(self) -> int:
         return len(self._sims)
 
     def release(self, network: NetworkSpec, route: RouteSpec,
+                masks: str = "auto",
                 *, clear: Optional[bool] = None) -> None:
         """Drop one simulator (no-op if absent) — for drivers that know a
         fabric won't be needed again before the cache as a whole closes.
@@ -180,7 +195,7 @@ class SimulatorCache:
         fabrics are still cached would evict their executables too and
         force silent recompiles.
         """
-        sim = self._sims.pop((network, route), None)
+        sim = self._sims.pop((network, route, masks), None)
         if sim is not None:
             if clear is None:
                 clear = not self._sims
@@ -490,10 +505,19 @@ def run(experiment: Experiment, *,
     With ``cache`` given, the compiled simulator is fetched from / stored
     into it and left open; otherwise a private simulator is built and
     closed before returning.
+
+    Admission control runs first (see :mod:`repro.api.admission`): an
+    experiment predicted to exceed host RAM — resident estimate times the
+    empirical compile-RAM multiplier — is auto-downgraded to blocked
+    routing masks when that closes the gap, and refused with an
+    actionable :class:`~repro.api.admission.AdmissionError` otherwise
+    (``REPRO_ADMISSION=warn|off`` relaxes the gate).
     """
+    masks = _admitted_masks(experiment)
     owns = cache is None
-    sim = (_make_simulator(experiment.network, experiment.route) if owns
-           else cache.get(experiment.network, experiment.route))
+    sim = (_make_simulator(experiment.network, experiment.route, masks)
+           if owns
+           else cache.get(experiment.network, experiment.route, masks))
     try:
         return _run_on(sim, experiment)
     finally:
@@ -519,7 +543,11 @@ def run_all(experiments, *, cache: Optional[SimulatorCache] = None,
         cache = SimulatorCache()
     groups = (_fold_groups(experiments) if fold_seeds
               else [[e] for e in experiments])
-    last_use = {(e.network, e.route): i for i, e in enumerate(experiments)}
+    # admission decisions are memoized per fabric, so pricing every
+    # experiment up front costs one topology build per distinct fabric
+    masks = {id(e): _admitted_masks(e) for e in experiments}
+    last_use = {(e.network, e.route, masks[id(e)]): i
+                for i, e in enumerate(experiments)}
     results = []
     pos = 0
     try:
@@ -527,14 +555,16 @@ def run_all(experiments, *, cache: Optional[SimulatorCache] = None,
             if len(group) == 1:
                 results.append(run(group[0], cache=cache))
             else:
-                sim = cache.get(group[0].network, group[0].route)
+                m = masks[id(group[0])]
+                sim = cache.get(group[0].network, group[0].route, m)
                 metric, per = _batched_metrics(
                     sim, group[0], [e.seed for e in group])
                 results.extend(_unfold_batch(group, metric, per))
             pos += len(group)
             e = group[-1]
-            if owns and last_use[(e.network, e.route)] == pos - 1:
-                cache.release(e.network, e.route)
+            if owns and last_use[(e.network, e.route,
+                                  masks[id(e)])] == pos - 1:
+                cache.release(e.network, e.route, masks[id(e)])
         return results
     finally:
         if owns:

@@ -70,6 +70,14 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # a SIGKILL mid-save leaves a tmp.<step> behind; it never shadows
+        # a finished checkpoint (only the rename publishes), but stale
+        # partial writes would accumulate across supervised retries
+        for name in os.listdir(directory):
+            if name.startswith("tmp."):
+                import shutil
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ #
     def _write(self, step: int, host_tree: dict, meta: dict):

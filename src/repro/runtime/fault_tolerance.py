@@ -27,12 +27,50 @@ import numpy as np
 from ..checkpointing.checkpoint import Checkpointer
 
 
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential backoff with *deterministic* jitter.
+
+    The delay for a retry is ``base_s * factor**(consecutive-1)`` capped
+    at ``cap_s``, scaled by a jitter factor drawn from a PRNG seeded on
+    ``(seed, total)`` — the total failure count is a monotonic counter,
+    so the decision path contains no wall-clock reads (``time.time()``
+    never feeds the schedule) and two runs that fail the same way sleep
+    the same amounts.  Jitter de-synchronizes worker herds without
+    sacrificing replayability.
+    """
+
+    base_s: float = 0.5
+    factor: float = 2.0
+    cap_s: float = 30.0
+    jitter: float = 0.1      # +/- fraction of the delay
+    seed: int = 0
+
+    def delay(self, consecutive: int, total: int) -> float:
+        """Sleep before retry number ``consecutive`` (1-based, consecutive
+        failures since the last success); ``total`` is the lifetime
+        failure count, used only to decorrelate the jitter draw."""
+        d = min(self.base_s * self.factor ** max(int(consecutive) - 1, 0),
+                self.cap_s)
+        if self.jitter:
+            u = np.random.default_rng((self.seed, int(total))).random()
+            d *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return float(d)
+
+
 @dataclasses.dataclass
 class FTConfig:
     ckpt_every: int = 50
-    max_retries: int = 3
+    max_retries: int = 3            # total failures tolerated per run()
+    max_consecutive: Optional[int] = None   # default: same as max_retries
+    backoff: BackoffPolicy = BackoffPolicy()
     straggler_z: float = 3.0
     ema: float = 0.9
+
+    @property
+    def consecutive_limit(self) -> int:
+        return (self.max_retries if self.max_consecutive is None
+                else self.max_consecutive)
 
 
 class StragglerDetector:
@@ -109,20 +147,38 @@ class FaultTolerantRunner:
     injection point for failures: tests raise from it to exercise
     restore, and :func:`schedule_fault_hook` adapts a simulator
     :class:`repro.core.FailureSchedule` to it so link/switch failures
-    land on the training-step clock."""
+    land on the training-step clock.
+
+    Failures are counted on two clocks: ``total_failures`` (lifetime of
+    the ``run()``, bounded by ``cfg.max_retries``) and
+    ``consecutive_failures`` (reset by any successful step, bounded by
+    ``cfg.max_consecutive``) — a long job that hits scattered transients
+    keeps going, while a hard-wedged step still fails fast.  Before each
+    restore the runner sleeps ``cfg.backoff.delay(consecutive, total)``
+    (deterministic jitter, no wall-clock in the schedule); ``sleep_fn``
+    is injectable so tests assert the exact delays without sleeping."""
 
     def __init__(self, step_fn: Callable, batch_at: Callable,
                  ckpt: Checkpointer, cfg: FTConfig = FTConfig(),
                  fault_hook: Optional[Callable[[int], None]] = None,
-                 shardings=None):
+                 shardings=None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         self.step_fn = step_fn
         self.batch_at = batch_at
         self.ckpt = ckpt
         self.cfg = cfg
         self.fault_hook = fault_hook          # tests inject failures here
         self.shardings = shardings
+        self.sleep_fn = sleep_fn
         self.stragglers = StragglerDetector(cfg)
-        self.restarts = 0
+        self.total_failures = 0
+        self.consecutive_failures = 0
+        self.delays: list[float] = []         # backoff actually applied
+
+    @property
+    def restarts(self) -> int:
+        """Lifetime failure count (back-compat alias)."""
+        return self.total_failures
 
     def _check_health(self, metrics: dict):
         loss = metrics.get("loss")
@@ -144,16 +200,25 @@ class FaultTolerantRunner:
                 self.stragglers.observe(step, dt)
                 history.append({k: float(v) for k, v in metrics.items()})
                 step += 1
+                self.consecutive_failures = 0
                 if step % self.cfg.ckpt_every == 0:
                     self.ckpt.save_async(step, state)
             except Exception:
-                self.restarts += 1
-                if self.restarts > self.cfg.max_retries:
+                self.total_failures += 1
+                self.consecutive_failures += 1
+                if (self.total_failures > self.cfg.max_retries
+                        or self.consecutive_failures
+                        > self.cfg.consecutive_limit):
                     raise
                 self.ckpt.wait()
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     raise
+                delay = self.cfg.backoff.delay(self.consecutive_failures,
+                                               self.total_failures)
+                self.delays.append(delay)
+                if delay > 0:
+                    self.sleep_fn(delay)
                 state, meta = self.ckpt.restore(state, latest,
                                                 self.shardings)
                 step = meta["step"]

@@ -1,0 +1,297 @@
+"""Resumable run-to-completion drivers: kill -9 loses a segment, not a run.
+
+The engine's device loops (``run_program`` / ``run_completion`` /
+``run_chunk``) donate their state pytrees — once a ``lax.while_loop``
+owns the buffers, the host has nothing to save and nothing to resume.
+This module re-drives those loops in **bounded segments**
+(``budget_chunks`` chunk bodies, or a fixed slot count for the windowed
+metrics) and snapshots the state dict through
+:class:`repro.checkpointing.Checkpointer` at every segment boundary —
+atomic rename, bounded retention, dtype-view handling for the bit-packed
+``p_sd``/``p_bh`` and ``uint32`` mask arrays.
+
+Bitwise contract
+----------------
+A bounded segment's chunk body is byte-for-byte the unbounded loop's
+(the budget only adds an iteration counter to the carry), and the
+snapshot is taken from the *returned* state before the next donating
+call, so:
+
+* a chain of segments equals one unbounded call, bitwise;
+* a run SIGKILLed between (or during) segments and resumed from the
+  latest checkpoint replays the remaining segments bitwise — the PRNG
+  ``key``, phase pointers, queue rings, and free-list all ride in the
+  snapshot;
+* a checkpoint interrupted mid-write is discarded by the atomic-rename
+  protocol, so resume falls back to the previous boundary.
+
+What is (and is not) in a snapshot: the full engine state dict (plus the
+``done`` completion-slot array for ``run_completion`` and the
+measurement-window base counters for the windowed drivers) — but never
+the routing tables of an *unarmed* simulator, the compiled program
+arrays' identity, or the jit cache; those are rebuilt deterministically
+from the spec on resume.  A fingerprint of the run configuration is
+stored in the checkpoint meta and validated on restore, so resuming with
+a different spec fails loudly instead of silently diverging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from ..checkpointing.checkpoint import Checkpointer
+from ..simulator.engine import LATENCY_QS, Traffic, percentiles
+
+__all__ = ["ResilientConfig", "open_checkpointer", "run_program_resumable",
+           "run_completion_resumable", "run_window_resumable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilientConfig:
+    """Segmenting/retention knobs shared by the resumable drivers.
+
+    ``every`` is the segment length: chunk bodies per device call for the
+    program/completion loops, slots per device call for the windowed
+    metrics.  Smaller = finer resume granularity, more host round-trips
+    and snapshot I/O; the results are bitwise identical either way.
+    """
+
+    every: int = 64
+    keep: int = 3
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+
+
+def open_checkpointer(ckpt: Union[str, Checkpointer],
+                      keep: int = 3) -> Checkpointer:
+    if isinstance(ckpt, Checkpointer):
+        return ckpt
+    return Checkpointer(ckpt, keep=keep)
+
+
+def _traffic_desc(traffic: Traffic) -> str:
+    # Traffic is a frozen dataclass of scalars: repr is deterministic and
+    # captures every field that shapes the run
+    return repr(traffic)
+
+
+def _seed_desc(seed: int, seeds) -> Union[int, list]:
+    return [int(s) for s in seeds] if seeds is not None else int(seed)
+
+
+def _check_fingerprint(meta: dict, fp: dict, where: str) -> None:
+    got = meta.get("fingerprint")
+    if got != fp:
+        diff = {k: (got.get(k) if isinstance(got, dict) else None, fp[k])
+                for k in fp
+                if not isinstance(got, dict) or got.get(k) != fp[k]}
+        raise ValueError(
+            f"checkpoint in {where} was written by a different run "
+            f"configuration; refusing to resume (mismatched fields: "
+            f"{diff}).  Point --ckpt-dir at a fresh directory or rerun "
+            "with the original spec.")
+
+
+def _host_state(st: dict) -> dict:
+    """One host transfer of a state dict (fresh numpy buffers — the
+    device state is about to be donated to the next segment)."""
+    return {k: np.asarray(v) for k, v in jax.device_get(st).items()}
+
+
+# ---------------------------------------------------------------------- #
+# collective programs
+# ---------------------------------------------------------------------- #
+def run_program_resumable(sim, program, *, ckpt, chunk: int = 16,
+                          max_slots: int = 60_000, seed: int = 0,
+                          seeds=None,
+                          config: ResilientConfig = ResilientConfig()) -> dict:
+    """:meth:`Simulator.run_program`, checkpointed at every ``every``-chunk
+    boundary.  Returns the engine result dict plus ``segments`` (device
+    calls this invocation) and ``resumed_from`` (checkpoint step picked
+    up, ``None`` for a fresh run).  Bitwise identical to the unbounded
+    call, interrupted or not.
+    """
+    ck = open_checkpointer(ckpt, config.keep)
+    fp = {"kind": "program", "chunk": int(chunk),
+          "max_slots": int(max_slots), "every": int(config.every),
+          "schedule": program.schedule, "window": int(program.window),
+          "n_phases": int(program.n_phases), "S": int(sim.S),
+          "seed": _seed_desc(seed, seeds)}
+    st0 = (sim.make_program_batch_state(program, seeds)
+           if seeds is not None else sim.make_program_state(program, seed))
+    latest = ck.latest_step()
+    seg, resumed = 0, None
+    if latest is not None:
+        tree, meta = ck.restore({"state": st0}, latest)
+        _check_fingerprint(meta, fp, ck.dir)
+        st, seg, resumed = tree["state"], int(meta["segment"]), latest
+    else:
+        st = st0
+    running = True
+    while running:
+        r = sim.run_program(program, chunk=chunk, max_slots=max_slots,
+                            state=st, budget_chunks=config.every)
+        st, running = r["state"], r["running"]
+        seg += 1
+        ck.save(seg, {"state": _host_state(st)},
+                meta={"fingerprint": fp, "segment": seg,
+                      "running": bool(running)})
+    out = dict(r)
+    out["segments"] = seg
+    out["resumed_from"] = resumed
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# free-running completion (legacy all2all)
+# ---------------------------------------------------------------------- #
+def run_completion_resumable(sim, traffic: Traffic, expected: int, *, ckpt,
+                             chunk: int = 128, max_slots: int = 100_000,
+                             seed: int = 0, seeds=None,
+                             config: ResilientConfig = ResilientConfig()
+                             ) -> dict:
+    """:meth:`Simulator.run_completion` in checkpointed segments.  The
+    per-replica ``done`` completion-slot array is part of every snapshot,
+    so a resumed run keeps the exact slots already recorded."""
+    ck = open_checkpointer(ckpt, config.keep)
+    fp = {"kind": "completion", "chunk": int(chunk),
+          "max_slots": int(max_slots), "every": int(config.every),
+          "expected": int(expected), "S": int(sim.S),
+          "traffic": _traffic_desc(traffic),
+          "seed": _seed_desc(seed, seeds)}
+    st0 = (sim.make_batch_state(traffic, seeds) if seeds is not None
+           else sim.make_state(traffic, seed))
+    done0 = np.full_like(np.asarray(st0["ejected"]), -1)
+    latest = ck.latest_step()
+    seg, resumed = 0, None
+    if latest is not None:
+        tree, meta = ck.restore({"state": st0, "done": done0}, latest)
+        _check_fingerprint(meta, fp, ck.dir)
+        st, done = tree["state"], tree["done"]
+        seg, resumed = int(meta["segment"]), latest
+    else:
+        st, done = st0, done0
+    running = True
+    while running:
+        r = sim.run_completion(traffic, expected, chunk=chunk,
+                               max_slots=max_slots, state=st,
+                               budget_chunks=config.every, done=done)
+        st, done, running = r["state"], r["done"], r["running"]
+        seg += 1
+        ck.save(seg, {"state": _host_state(st), "done": np.asarray(done)},
+                meta={"fingerprint": fp, "segment": seg,
+                      "running": bool(running)})
+    out = dict(r)
+    out["segments"] = seg
+    out["resumed_from"] = resumed
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# windowed metrics (throughput / latency / serving)
+# ---------------------------------------------------------------------- #
+# every window metric's base snapshot is a subset of these state counters
+_WINDOW_COUNTERS = ("ejected", "hop_sum", "pool_stall", "lat_hist",
+                    "arrived", "arr_drop")
+_SERVING_KEYS = ("lat_hist", "ejected", "arrived", "arr_drop", "pool_stall")
+
+
+def run_window_resumable(sim, traffic: Traffic, *, metric: str, ckpt,
+                         warm: int = 200, measure: int = 400, seed: int = 0,
+                         seeds=None,
+                         config: ResilientConfig = ResilientConfig()) -> dict:
+    """``run_throughput`` / ``run_latency`` / ``run_serving`` in
+    checkpointed ``every``-slot segments.
+
+    The warm/measure structure is preserved exactly: segments never cross
+    the warm boundary, the base counter snapshot taken there is part of
+    every later checkpoint, and the final window deltas are computed from
+    the same integer counters the engine drivers subtract on device — so
+    the returned metrics match the one-shot drivers bitwise.
+    """
+    if metric not in ("throughput", "latency", "serving"):
+        raise ValueError(f"run_window_resumable supports "
+                         f"throughput/latency/serving, got {metric!r}")
+    if metric == "serving" and traffic.pattern != "arrival":
+        raise ValueError(f"serving needs Traffic('arrival'), got "
+                         f"{traffic.pattern!r}")
+    ck = open_checkpointer(ckpt, config.keep)
+    batched = seeds is not None
+    fp = {"kind": "window", "metric": metric, "warm": int(warm),
+          "measure": int(measure), "every": int(config.every),
+          "S": int(sim.S), "traffic": _traffic_desc(traffic),
+          "seed": _seed_desc(seed, seeds)}
+    st0 = (sim.make_batch_state(traffic, seeds) if batched
+           else sim.make_state(traffic, seed))
+    keys = tuple(k for k in _WINDOW_COUNTERS if k in st0)
+    base0 = {k: np.zeros_like(np.asarray(st0[k])) for k in keys}
+    latest = ck.latest_step()
+    cursor, seg, resumed, base = 0, 0, None, None
+    if latest is not None:
+        tree, meta = ck.restore({"state": st0, "base": base0}, latest)
+        _check_fingerprint(meta, fp, ck.dir)
+        st = tree["state"]
+        base = tree["base"] if meta["has_base"] else None
+        cursor, seg, resumed = int(meta["cursor"]), int(meta["segment"]), \
+            latest
+    else:
+        st = st0
+    advance = sim.run_chunk_batch if batched else sim.run_chunk
+    total = warm + measure
+
+    def save(running: bool):
+        ck.save(seg, {"state": _host_state(st), "base": base or base0},
+                meta={"fingerprint": fp, "segment": seg, "cursor": cursor,
+                      "has_base": base is not None,
+                      "running": bool(running)})
+
+    while True:
+        if cursor >= warm and base is None:
+            # the measurement-window base: same counters the engine
+            # drivers snapshot (`st[k] + 0`) before the measure chunk
+            base = {k: np.asarray(jax.device_get(st[k])) for k in keys}
+            seg += 1
+            save(running=cursor < total)
+        if cursor >= total:
+            break
+        bound = warm if cursor < warm else total
+        n = min(config.every, bound - cursor)
+        st = advance(st, traffic, n)
+        cursor += n
+        if cursor < warm or base is not None:
+            # (at the warm boundary the save above covers this segment)
+            seg += 1
+            save(running=cursor < total)
+
+    sth = _host_state(st)
+    m = {k: sth[k] - base[k] for k in keys}
+    S = sim.S
+    extra = {"state": st, "segments": seg, "resumed_from": resumed}
+    if metric == "throughput":
+        e, h = m["ejected"], m["hop_sum"]
+        if batched:
+            return {"throughput": e / (S * measure),
+                    "avg_hops": h / np.maximum(e, 1),
+                    "ejected": sth["ejected"],
+                    "pool_stall": m["pool_stall"], **extra}
+        return {"throughput": int(e) / (S * measure),
+                "avg_hops": int(h) / max(int(e), 1),
+                "ejected": int(sth["ejected"]),
+                "pool_stall": int(m["pool_stall"]), **extra}
+    if metric == "latency":
+        hist = m["lat_hist"]
+        if batched:
+            per = [percentiles(row, LATENCY_QS) for row in hist]
+            out = {"hist": hist, **extra}
+            for q in LATENCY_QS:
+                k = f"p{q}"
+                out[k] = np.asarray([p[k] for p in per])
+            return out
+        return {"hist": hist, **percentiles(hist, LATENCY_QS), **extra}
+    serving = {k: m[k] for k in _SERVING_KEYS}
+    return {**sim._serving_metrics(serving, S, measure), **extra}

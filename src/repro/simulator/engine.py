@@ -1283,6 +1283,47 @@ class Simulator:
         done0 = jnp.full_like(st["ejected"], -1)
         return jax.lax.while_loop(cond, chunk_body, (st, done0))
 
+    @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6),
+                       donate_argnums=(1, 2))
+    def _completion_loop_bounded(self, st, done, traffic: Traffic, expected,
+                                 chunk: int, max_slots: int, budget: int):
+        """:meth:`_completion_loop` with a chunk *budget*: runs at most
+        ``budget`` chunk bodies, then returns control to the host — the
+        checkpointable chunk boundary.  The chunk body is byte-for-byte
+        the unbounded loop's, so a sequence of bounded segments (resumed
+        from snapshots of ``(state, done)``) replays the uninterrupted
+        ``_completion_loop`` bitwise.  ``done`` is carried explicitly so a
+        resumed run keeps the exact completion slots already recorded.
+        """
+        batched = st["ejected"].ndim == 1
+        step = lambda s: self._step(s, traffic)
+        if batched:
+            step = jax.vmap(step)
+        expected = jnp.asarray(expected, jnp.int32)
+
+        def slot_body(carry, _):
+            s, done = carry
+            s = step(s)
+            newly = (s["ejected"] >= expected) & (done < 0)
+            done = jnp.where(newly, s["slot"], done)
+            return (s, done), None
+
+        def chunk_body(carry):
+            s, done, it = carry
+            (s, done), _ = jax.lax.scan(slot_body, (s, done), None,
+                                        length=chunk)
+            return (s, done, it + 1)
+
+        def cond(carry):
+            s, done, it = carry
+            running = ~jnp.all(done >= 0)
+            return (running & (jnp.max(s["slot"]) < max_slots)
+                    & (it < budget))
+
+        st, done, _ = jax.lax.while_loop(
+            cond, chunk_body, (st, done, jnp.zeros((), jnp.int32)))
+        return st, done
+
     # ------------------------------------------------------------------ #
     # high-level drivers
     # ------------------------------------------------------------------ #
@@ -1710,7 +1751,9 @@ class Simulator:
 
     def run_completion(self, traffic: Traffic, expected: int,
                        chunk: int = 128, max_slots: int = 100_000,
-                       seed: int = 0, state: Optional[dict] = None) -> dict:
+                       seed: int = 0, state: Optional[dict] = None,
+                       budget_chunks: Optional[int] = None,
+                       done=None) -> dict:
         """Run until all ``expected`` packets are delivered (collectives).
 
         The chunk loop runs entirely on device (``lax.while_loop``); the
@@ -1722,6 +1765,14 @@ class Simulator:
 
         A caller-provided ``state`` is consumed (its buffers are donated to
         the device loop) — reuse the returned ``state`` instead.
+
+        ``budget_chunks=B`` bounds one call to at most ``B`` chunk bodies —
+        the checkpointable segment used by
+        :mod:`repro.runtime.resilient`.  The result then carries
+        ``running`` (True while delivery is still in progress) and
+        ``done`` (the per-replica completion-slot array to thread into the
+        next segment alongside ``state``); a chain of bounded segments is
+        bitwise-identical to one unbounded call.
         """
         st = state if state is not None else self.make_state(traffic, seed)
         # p_bh packs the born slot above the hop byte; past 2^23 slots the
@@ -1730,17 +1781,29 @@ class Simulator:
             "max_slots overflows the p_bh born-slot packing (< 2^23)"
         st = {k: jnp.asarray(v) for k, v in st.items()}
         with _quiet_cpu_donation():
-            st, done = self._completion_loop(st, traffic, expected, chunk,
-                                             max_slots)
+            if budget_chunks is None:
+                st, done = self._completion_loop(st, traffic, expected,
+                                                 chunk, max_slots)
+            else:
+                done = (jnp.full_like(st["ejected"], -1) if done is None
+                        else jnp.asarray(done, jnp.int32))
+                st, done = self._completion_loop_bounded(
+                    st, done, traffic, expected, chunk, max_slots,
+                    int(budget_chunks))
         done = np.asarray(done)
         final = np.asarray(st["slot"])
         slots = np.where(done >= 0, done, final)
         completed = done >= 0
+        out = {"state": st}
+        if budget_chunks is not None:
+            out["done"] = done
+            out["running"] = bool((~(done >= 0)).any()
+                                  and final.max() < max_slots)
         if done.ndim == 0:
             return {"slots": int(slots), "completed": bool(completed),
-                    "pool_stall": int(st["pool_stall"]), "state": st}
+                    "pool_stall": int(st["pool_stall"]), **out}
         return {"slots": slots, "completed": completed,
-                "pool_stall": np.asarray(st["pool_stall"]), "state": st}
+                "pool_stall": np.asarray(st["pool_stall"]), **out}
 
     def run_completion_batch(self, traffic: Traffic, expected: int, seeds,
                              chunk: int = 128,
@@ -1852,9 +1915,61 @@ class Simulator:
 
         return jax.lax.while_loop(cond, chunk_body, st)
 
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5),
+                       donate_argnums=(1,))
+    def _program_loop_bounded(self, st, traffic: Traffic, chunk: int,
+                              max_slots: int, budget: int):
+        """:meth:`_program_loop` with a chunk *budget*: at most ``budget``
+        chunk bodies per call, then control returns to the host — the
+        checkpointable chunk boundary for resumable collective runs.  The
+        chunk body and the program-completion condition are byte-for-byte
+        the unbounded loop's (the budget only adds an iteration counter to
+        the carry), so a chain of bounded segments — including segments
+        re-entered from a restored snapshot — replays the uninterrupted
+        ``run_program`` bitwise.
+        """
+        batched = st["ejected"].ndim == 1
+        step = lambda s: self._step(s, traffic, chunk=chunk,
+                                    max_slots=max_slots)
+        if batched:
+            axes = {k: None if st[k].ndim == self._PROG_SHARED.get(k, -1)
+                    else 0 for k in st}
+            step = jax.vmap(step, in_axes=(axes,), out_axes=axes)
+
+        def chunk_body(carry):
+            s, it = carry
+            s = jax.lax.scan(lambda c, _: (step(c), None), s, None,
+                             length=chunk)[0]
+            return s, it + 1
+
+        if traffic.schedule == "window":
+            def running(s):
+                live = ~jnp.all(s["phase_done"][..., -1] >= 0)
+                return live & (jnp.max(s["slot"]) < max_slots)
+        else:
+            def running(s):
+                return ~jnp.all(s["phase"] >= traffic.n_phases)
+
+        def cond(carry):
+            s, it = carry
+            return running(s) & (it < budget)
+
+        st, _ = jax.lax.while_loop(cond, chunk_body,
+                                   (st, jnp.zeros((), jnp.int32)))
+        return st
+
+    def _program_running(self, st, traffic: Traffic,
+                         max_slots: int) -> bool:
+        """Host-side mirror of the program loop's continue condition."""
+        if traffic.schedule == "window":
+            live = bool((np.asarray(st["phase_done"])[..., -1] < 0).any())
+            return live and int(np.asarray(st["slot"]).max()) < max_slots
+        return bool((np.asarray(st["phase"]) < traffic.n_phases).any())
+
     def run_program(self, program, *, chunk: int = 16,
                     max_slots: int = 60_000, seed: int = 0, seeds=None,
-                    state: Optional[dict] = None) -> dict:
+                    state: Optional[dict] = None,
+                    budget_chunks: Optional[int] = None) -> dict:
         """Run a compiled :class:`repro.workloads.CompiledProgram` to
         completion, entirely on device.
 
@@ -1864,6 +1979,14 @@ class Simulator:
         ``pool_stall``, and ``phase_slots`` (``[..., n_phases]`` — exact
         per-phase durations under ``barrier``, cumulative completion slots
         under ``window``); per-replica arrays when batched.
+
+        ``budget_chunks=B`` bounds one call to at most ``B`` chunk bodies
+        (the checkpointable segment used by
+        :mod:`repro.runtime.resilient`); the result then carries
+        ``running`` — True while the program has phases left — and the
+        other fields are partial until it flips False.  A chain of bounded
+        segments over the same ``state`` is bitwise-identical to one
+        unbounded call.
         """
         assert max_slots < (1 << 23), \
             "max_slots overflows the p_bh born-slot packing (< 2^23)"
@@ -1876,7 +1999,12 @@ class Simulator:
             st = self.make_program_state(program, seed)
         st = {k: jnp.asarray(v) for k, v in st.items()}
         with _quiet_cpu_donation():
-            st = self._program_loop(st, traffic, chunk, max_slots)
+            if budget_chunks is None:
+                st = self._program_loop(st, traffic, chunk, max_slots)
+            else:
+                st = self._program_loop_bounded(st, traffic, chunk,
+                                                max_slots,
+                                                int(budget_chunks))
         done = np.asarray(st["phase_done"])
         ok = np.asarray(st["phase_ok"])
         if traffic.schedule == "window":
@@ -1887,13 +2015,14 @@ class Simulator:
         else:
             slots = done.sum(axis=-1)
         completed = ok.all(axis=-1)
+        out = {"phase_slots": done, "state": st}
+        if budget_chunks is not None:
+            out["running"] = self._program_running(st, traffic, max_slots)
         if completed.ndim == 0:
             return {"slots": int(slots), "completed": bool(completed),
-                    "pool_stall": int(st["pool_stall"]),
-                    "phase_slots": done, "state": st}
+                    "pool_stall": int(st["pool_stall"]), **out}
         return {"slots": slots, "completed": completed,
-                "pool_stall": np.asarray(st["pool_stall"]),
-                "phase_slots": done, "state": st}
+                "pool_stall": np.asarray(st["pool_stall"]), **out}
 
 
 def percentiles(hist: np.ndarray, qs) -> dict:
