@@ -102,7 +102,8 @@ def phase_rebuild(fabric: str) -> dict:
 
 
 def _curve(fabric: str, pattern: str, load: float) -> dict:
-    from repro.api import Experiment, RouteSpec, WorkloadSpec, degrade_sweep
+    from repro.api import (DegradeSpec, Experiment, RouteSpec, WorkloadSpec,
+                           degrade_sweep)
 
     base = Experiment(
         network=_network(fabric),
@@ -111,7 +112,8 @@ def _curve(fabric: str, pattern: str, load: float) -> dict:
         name=f"faults.{fabric}.{pattern}{load:g}", seed=0,
         warm=WARM, measure=MEASURE)
     t0 = time.perf_counter()
-    rec = degrade_sweep(base, RATES, down_slot=DOWN_SLOT, fail_seed=0)
+    rec = degrade_sweep(DegradeSpec(base=base, rates=tuple(RATES),
+                                    down_slot=DOWN_SLOT, fail_seed=0))
     dt = time.perf_counter() - t0
     points = [{"rate": p["rate"], "n_links_down": p["n_links_down"],
                "delivered": p["delivered"], "retention": p["retention"],

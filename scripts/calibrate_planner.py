@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Recalibrate the fabric planner from the design-space-search artifact.
+
+Reads ``artifacts/PARETO_search.json`` (produced by ``python -m repro.api
+search``), distills the measured per-(family, pattern) efficiencies via
+:func:`repro.fabric.planner.pattern_eff_from_search`, and writes
+``benchmarks/CALIB_pattern_eff.json`` — the file
+:func:`repro.fabric.planner.load_pattern_eff` overlays onto the inline
+defaults at import time.
+
+Usage: PYTHONPATH=src python scripts/calibrate_planner.py \
+           [artifact_json] [calib_out_json]
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.fabric.planner import (CALIB_PATH, DEFAULT_PATTERN_EFF,  # noqa: E402
+                                  pattern_eff_from_search)
+
+ARTIFACT = Path(__file__).resolve().parents[1] / "artifacts" \
+    / "PARETO_search.json"
+
+
+def main(argv):
+    artifact = Path(argv[1]) if len(argv) > 1 else ARTIFACT
+    out = Path(argv[2]) if len(argv) > 2 else CALIB_PATH
+    with open(artifact) as f:
+        doc = json.load(f)
+    eff = pattern_eff_from_search(doc)
+    if not eff:
+        print(f"error: no fully-evaluated candidates with a mappable "
+              f"workload pattern in {artifact}", file=sys.stderr)
+        return 1
+    calib = {"source": str(artifact.name), "eff": eff,
+             "defaults": DEFAULT_PATTERN_EFF}
+    with open(out, "w") as f:
+        json.dump(calib, f, indent=2)
+        f.write("\n")
+    for fam, pats in sorted(eff.items()):
+        for pattern, e in sorted(pats.items()):
+            d = DEFAULT_PATTERN_EFF.get(fam, {}).get(pattern)
+            drift = "" if d is None else f"  (default {d:.2f})"
+            print(f"{fam:>12s}.{pattern:<9s} eff={e:.3f}{drift}")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

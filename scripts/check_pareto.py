@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""CI gate for design-space-search Pareto artifacts.
+
+Usage:
+    python scripts/check_pareto.py ARTIFACT [--against BASELINE]
+        [--require-pruned] [--require-family FAM] [--tolerance 0.2]
+
+Structural checks on ARTIFACT (every search record): statuses consistent,
+non-empty frontier of fully-evaluated candidates, frontier actually
+non-dominated.  ``--require-pruned`` additionally demands at least one
+candidate pruned by the estimator/admission gate before compiling
+(``est_peak_bytes`` present, no measured throughput).
+``--require-family`` demands the family appear among fully evaluated
+candidates.  ``--against`` compares to the committed baseline: same
+frontier labels, full-candidate throughput within ``--tolerance``
+relative.
+"""
+import argparse
+import json
+import sys
+
+
+def _records(doc):
+    return doc.get("searches", [doc]) if isinstance(doc, dict) else doc
+
+
+def check(artifact, baseline=None, require_pruned=False,
+          require_family=None, tolerance=0.2):
+    errors = []
+    for rec in _records(artifact):
+        name = rec.get("name", "?")
+        cands = rec.get("candidates", [])
+        full = [c for c in cands if c.get("status") == "full"]
+        pruned = [c for c in cands if c.get("status") == "pruned"]
+        if not rec.get("frontier"):
+            errors.append(f"{name}: empty frontier")
+        by_id = {c["id"]: c for c in cands}
+        for cid in rec.get("frontier", []):
+            c = by_id.get(cid)
+            if c is None or c.get("status") != "full":
+                errors.append(f"{name}: frontier id {cid} is not a fully "
+                              "evaluated candidate")
+            elif c.get("dominated"):
+                errors.append(f"{name}: frontier id {cid} is dominated")
+        counts = rec.get("counts", {})
+        for status, n in counts.items():
+            actual = sum(1 for c in cands if c.get("status") == status)
+            if actual != n:
+                errors.append(f"{name}: counts[{status}]={n} but "
+                              f"{actual} candidates carry it")
+        if require_pruned:
+            if not pruned:
+                errors.append(f"{name}: no candidate was pruned before "
+                              "compiling")
+            for c in pruned:
+                if "est_peak_bytes" not in c:
+                    errors.append(f"{name}: pruned candidate {c.get('id')} "
+                                  "lacks the memory estimate")
+                if "screen" in c or "full" in c:
+                    errors.append(f"{name}: pruned candidate {c.get('id')} "
+                                  "was simulated anyway")
+        if require_family and not any(c["family"] == require_family
+                                      for c in full):
+            errors.append(f"{name}: family {require_family!r} absent from "
+                          "fully evaluated candidates")
+    if baseline is not None:
+        base = {r.get("name"): r for r in _records(baseline)}
+        for rec in _records(artifact):
+            name = rec.get("name", "?")
+            ref = base.get(name)
+            if ref is None:
+                errors.append(f"{name}: missing from baseline")
+                continue
+            lab = lambda r: [c["label"] for c in r["candidates"]  # noqa: E731
+                             if c["id"] in set(r.get("frontier", []))]
+            if lab(rec) != lab(ref):
+                errors.append(f"{name}: frontier drifted — fresh {lab(rec)} "
+                              f"vs committed {lab(ref)}")
+            ref_thr = {c["label"]: c["throughput"]
+                       for c in ref["candidates"]
+                       if c.get("status") == "full"}
+            for c in rec["candidates"]:
+                if c.get("status") != "full":
+                    continue
+                r = ref_thr.get(c["label"])
+                if r is None or r <= 0:
+                    continue
+                drift = abs(c["throughput"] - r) / r
+                if drift > tolerance:
+                    errors.append(
+                        f"{name}: {c['label']} throughput drifted "
+                        f"{drift:.1%} (> {tolerance:.0%}) vs committed")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact")
+    ap.add_argument("--against")
+    ap.add_argument("--require-pruned", action="store_true")
+    ap.add_argument("--require-family")
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    args = ap.parse_args(argv)
+    with open(args.artifact) as f:
+        artifact = json.load(f)
+    baseline = None
+    if args.against:
+        with open(args.against) as f:
+            baseline = json.load(f)
+    errors = check(artifact, baseline, args.require_pruned,
+                   args.require_family, args.tolerance)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        n = len(_records(artifact))
+        print(f"pareto artifact OK ({n} search record(s))")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

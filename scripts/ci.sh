@@ -42,6 +42,26 @@ if [ "$LANE" = "pr" ]; then
     # Result must be identical to an uninterrupted repro.api.run
     python scripts/kill_resume_smoke.py
 
+    echo "== smoke: design-space search (tiny, deterministic frontier) =="
+    # budget-8 search over (family, radix, f, vcs) at 64 endpoints; the
+    # 0.6 MiB mem budget must prune >= 1 candidate before it compiles,
+    # and the frontier must be non-empty and identical across two runs
+    # under the fixed spec seed
+    python -m repro.api search examples/specs/tiny_search.json \
+        --pareto-out artifacts/tiny_pareto.json \
+        --out artifacts/tiny_search.json
+    python -m repro.api search examples/specs/tiny_search.json \
+        --pareto-out artifacts/tiny_pareto_rerun.json
+    python scripts/check_pareto.py artifacts/tiny_pareto.json \
+        --require-pruned
+    python - <<'PY'
+import json
+a = json.load(open("artifacts/tiny_pareto.json"))
+b = json.load(open("artifacts/tiny_pareto_rerun.json"))
+assert a == b, "tiny search is not deterministic under its fixed seed"
+print("tiny search deterministic OK")
+PY
+
     echo "CI OK (pr lane)"
     exit 0
 elif [ "$LANE" != "full" ]; then
@@ -112,6 +132,19 @@ echo "== bench: supervised scale point with injected SIGKILL =="
 python benchmarks/bench_scale.py --sizes tiny --families mrls \
     --supervised --inject-kill 8 \
     --out artifacts/BENCH_scale_supervised.json
+
+echo "== search: 1k design-space search vs committed Pareto frontier =="
+# re-runs the committed 1k uniform + all2all searches (evolutionary lane
+# included), gates the fresh frontier against artifacts/PARETO_search.json
+# (same frontier members, full-candidate throughput within 20%), and
+# re-distills the planner calibration — jellyfish must appear among the
+# fully evaluated candidates
+python -m repro.api search examples/specs/search_1k.json \
+    --pareto-out artifacts/PARETO_search_ci.json
+python scripts/check_pareto.py artifacts/PARETO_search_ci.json \
+    --against artifacts/PARETO_search.json --require-family jellyfish
+python scripts/calibrate_planner.py artifacts/PARETO_search_ci.json \
+    artifacts/CALIB_pattern_eff_ci.json
 
 echo "== bench: fault injection (delta rebuild + degradation curve) =="
 # emits artifacts/BENCH_faults.json and fails if the delta-vs-full

@@ -32,7 +32,8 @@ from .admission import (AdmissionDecision, AdmissionError, check_admission,
                         predict_peak_rss)
 from .resume import resume, run_resumable
 from .sweep import expand_axes, sweep
-from .degrade import degrade_sweep, degrade_sweep_from_dict
+from .degrade import (DegradeSpec, degrade_sweep, degrade_sweep_many,
+                      degrade_sweep_from_dict)
 from ..core.failures import FailureEvent, FailureSchedule
 
 __all__ = [
@@ -47,6 +48,7 @@ __all__ = [
     "compile_ram_multiplier", "host_ram_bytes", "predict_peak_rss",
     "resume", "run_resumable",
     "expand_axes", "sweep",
-    "degrade_sweep", "degrade_sweep_from_dict",
+    "DegradeSpec", "degrade_sweep", "degrade_sweep_many",
+    "degrade_sweep_from_dict",
     "FailureEvent", "FailureSchedule",
 ]

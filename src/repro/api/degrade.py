@@ -1,7 +1,8 @@
 """Degraded-mode resilience sweeps: throughput retention vs links down.
 
-:func:`degrade_sweep` takes one base :class:`Experiment` and a ladder of
-link-failure *rates* (fraction of the fabric's undirected links), runs
+Spec-first entry point: :func:`degrade_sweep` takes one frozen
+:class:`DegradeSpec` — a base :class:`Experiment` plus a ladder of
+link-failure *rates* (fraction of the fabric's undirected links) — runs
 the resilience metric at each rate, and folds the results into a
 degradation record::
 
@@ -20,11 +21,17 @@ All rates share ONE armed simulator: the engine's failure branch traces
 the live-mask path once, and between rates only the *host* schedule and
 the device up-mask/table state change (``run_resilience`` restores the
 pristine tables after every run), so an N-point sweep costs one compile.
+
+A raw dict (the JSON file format) is accepted at the boundary via
+``DegradeSpec.from_dict``; the old ``degrade_sweep(base_experiment,
+rates, ...)`` positional signature and ``degrade_sweep_from_dict`` live
+on as deprecation shims (see docs/API.md migration notes).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import warnings
+from typing import Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.failures import FailureSchedule, canonical_link_ids
 from ..core.routing import build_tables
@@ -33,7 +40,58 @@ from .registry import build_network
 from .runner import _to_traffic
 from .specs import Experiment
 
-__all__ = ["degrade_sweep", "degrade_sweep_from_dict"]
+__all__ = ["DegradeSpec", "degrade_sweep", "degrade_sweep_many",
+           "degrade_sweep_from_dict"]
+
+DEFAULT_RATES = (0.0, 0.01, 0.02, 0.05, 0.10)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeSpec:
+    """One degradation sweep: base experiment x failure-rate ladder.
+
+    ``base`` supplies fabric, route (typically ``policy="degraded"``),
+    workload, warm/measure window, and seed; any failure schedule already
+    on ``base.network`` is ignored — the sweep owns failure injection.
+    ``fail_seed`` seeds the link ladder, ``down_slot`` the failure slot,
+    ``fail_policy`` what in-flight packets on a dead port do
+    (``requeue`` | ``drop``).
+    """
+
+    base: Experiment
+    rates: Tuple[float, ...] = DEFAULT_RATES
+    down_slot: int = 1
+    fail_policy: str = "requeue"
+    fail_seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.base, Experiment):
+            object.__setattr__(self, "base", Experiment.from_dict(self.base))
+        rates = tuple(float(r) for r in self.rates)
+        if not rates:
+            raise ValueError("DegradeSpec needs at least one rate")
+        if any(r < 0 or r >= 1 for r in rates):
+            raise ValueError(f"rates must lie in [0, 1), got {list(rates)}")
+        object.__setattr__(self, "rates", rates)
+        if self.fail_policy not in ("requeue", "drop"):
+            raise ValueError(f"unknown fail_policy {self.fail_policy!r} "
+                             "(expected requeue|drop)")
+        if self.down_slot < 0:
+            raise ValueError(f"down_slot must be >= 0, got {self.down_slot}")
+
+    def to_dict(self) -> dict:
+        return {"base": self.base.to_dict(), "rates": list(self.rates),
+                "down_slot": self.down_slot,
+                "fail_policy": self.fail_policy,
+                "fail_seed": self.fail_seed}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "DegradeSpec":
+        return cls(base=Experiment.from_dict(d["base"]),
+                   rates=tuple(d.get("rates", DEFAULT_RATES)),
+                   down_slot=int(d.get("down_slot", 1)),
+                   fail_policy=d.get("fail_policy", "requeue"),
+                   fail_seed=int(d.get("fail_seed", 0)))
 
 
 def _schedule(topo, k: int, *, down_slot: int, seed: int,
@@ -44,42 +102,52 @@ def _schedule(topo, k: int, *, down_slot: int, seed: int,
                                         seed=seed, policy=fail_policy)
 
 
-def degrade_sweep(base: Experiment, rates: Sequence[float], *,
+def degrade_sweep(spec: Union[DegradeSpec, Mapping, Experiment],
+                  rates: Optional[Sequence[float]] = None, *,
                   down_slot: int = 1, fail_policy: str = "requeue",
                   fail_seed: int = 0) -> dict:
     """Run one degradation sweep and return its record (see module doc).
 
-    ``base`` supplies fabric, route (typically ``policy="degraded"``),
-    workload, warm/measure window, and seed; any schedule already on
-    ``base.network`` is ignored — the sweep owns failure injection.
+    ``spec`` is a :class:`DegradeSpec` (or its dict form, converted at
+    the boundary).  Passing a bare :class:`Experiment` plus ``rates`` —
+    the pre-spec signature — still works but is deprecated.
     """
-    rates = [float(r) for r in rates]
-    if not rates:
-        raise ValueError("degrade_sweep needs at least one rate")
-    if any(r < 0 or r >= 1 for r in rates):
-        raise ValueError(f"rates must lie in [0, 1), got {rates}")
+    if isinstance(spec, Experiment):
+        warnings.warn(
+            "degrade_sweep(base_experiment, rates, ...) is deprecated; "
+            "pass degrade_sweep(DegradeSpec(base=..., rates=..., ...))",
+            DeprecationWarning, stacklevel=2)
+        spec = DegradeSpec(base=spec, rates=tuple(rates or DEFAULT_RATES),
+                           down_slot=down_slot, fail_policy=fail_policy,
+                           fail_seed=fail_seed)
+    elif not isinstance(spec, DegradeSpec):
+        spec = DegradeSpec.from_dict(spec)
+    elif rates is not None:
+        raise TypeError("rates is part of DegradeSpec; pass it there")
 
+    base = spec.base
     network = dataclasses.replace(base.network, failures=None)
     topo = build_network(network)
     n_links = int(len(canonical_link_ids(topo)))
-    ks = [int(round(r * n_links)) for r in rates]
+    ks = [int(round(r * n_links)) for r in spec.rates]
 
-    schedules = [_schedule(topo, k, down_slot=down_slot, seed=fail_seed,
-                           fail_policy=fail_policy) for k in ks]
+    schedules = [_schedule(topo, k, down_slot=spec.down_slot,
+                           seed=spec.fail_seed,
+                           fail_policy=spec.fail_policy) for k in ks]
 
     # arm the simulator with the largest schedule so the failure branch
     # is traced; per-rate we only swap the host-side schedule object
     # (run_resilience restores pristine tables after each run)
     arm = max(schedules, key=len)
     if len(arm) == 0:
-        arm = _schedule(topo, 1, down_slot=down_slot, seed=fail_seed,
-                        fail_policy=fail_policy)
+        arm = _schedule(topo, 1, down_slot=spec.down_slot,
+                        seed=spec.fail_seed, fail_policy=spec.fail_policy)
     tables = build_tables(topo)
     sim = Simulator(tables, base.route.to_sim_config(), failures=arm)
     traffic = _to_traffic(base)
 
     points = []
-    for rate, k, sched in zip(rates, ks, schedules):
+    for rate, k, sched in zip(spec.rates, ks, schedules):
         sim.failures = sched.validate(topo)
         r = sim.run_resilience(traffic, warm=base.warm,
                                measure=base.measure, seed=base.seed)
@@ -98,8 +166,13 @@ def degrade_sweep(base: Experiment, rates: Sequence[float], *,
 
     return {"name": base.label(), "base": base.to_dict(),
             "n_links": n_links, "policy": base.route.policy,
-            "fail_policy": fail_policy, "down_slot": down_slot,
-            "fail_seed": fail_seed, "points": points}
+            "fail_policy": spec.fail_policy, "down_slot": spec.down_slot,
+            "fail_seed": spec.fail_seed, "points": points}
+
+
+def degrade_sweep_many(specs: Sequence[Union[DegradeSpec, Mapping]]) -> list:
+    """Run several degradation sweeps; returns one record per spec."""
+    return [degrade_sweep(s) for s in specs]
 
 
 def _none_nan(v) -> Optional[float]:
@@ -108,15 +181,12 @@ def _none_nan(v) -> Optional[float]:
 
 
 def degrade_sweep_from_dict(spec: dict) -> list:
-    """CLI bridge: ``{"base": {experiment}, "rates": [...], ...}`` or a
-    ``{"sweeps": [...]}`` list of such specs; returns a list of records."""
+    """Deprecated CLI bridge — :func:`degrade_sweep` now takes the dict
+    directly (``{"sweeps": [...]}`` lists go through
+    :func:`degrade_sweep_many`)."""
+    warnings.warn(
+        "degrade_sweep_from_dict is deprecated; pass the dict to "
+        "degrade_sweep (or degrade_sweep_many for {'sweeps': [...]})",
+        DeprecationWarning, stacklevel=2)
     specs = spec.get("sweeps", [spec]) if isinstance(spec, dict) else spec
-    out = []
-    for s in specs:
-        base = Experiment.from_dict(s["base"])
-        out.append(degrade_sweep(
-            base, s.get("rates", (0.0, 0.01, 0.02, 0.05, 0.10)),
-            down_slot=int(s.get("down_slot", 1)),
-            fail_policy=s.get("fail_policy", "requeue"),
-            fail_seed=int(s.get("fail_seed", 0))))
-    return out
+    return degrade_sweep_many(specs)

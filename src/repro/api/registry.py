@@ -40,9 +40,19 @@ _REGISTRY: dict = dict(TOPOLOGY_BUILDERS)
 
 def register_topology(name: str, builder: Callable[..., Topology],
                       *, overwrite: bool = False) -> None:
-    """Register ``builder`` under ``name`` for NetworkSpec resolution."""
+    """Register ``builder`` under ``name`` for NetworkSpec resolution.
+
+    Re-registering the *same* builder object under its existing name is a
+    no-op (module reloads and interactive sessions hit this path);
+    registering a *different* builder under a taken name still raises
+    unless ``overwrite=True``.
+    """
     if name in _REGISTRY and not overwrite:
-        raise ValueError(f"topology family {name!r} already registered")
+        if _REGISTRY[name] is builder:
+            return
+        raise ValueError(f"topology family {name!r} already registered "
+                         "with a different builder (pass overwrite=True "
+                         "to replace it)")
     _REGISTRY[name] = builder
 
 

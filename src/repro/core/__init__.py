@@ -1,7 +1,7 @@
 """The paper's primary contribution: MRLS topologies, multipass/Polarized
 routing, analytic scalability machinery, and collective workloads."""
 from .topology import (
-    Topology, mrls, fat_tree, oft, dragonfly, dragonfly_plus, rfc,
+    Topology, mrls, fat_tree, oft, dragonfly, dragonfly_plus, rfc, jellyfish,
 )
 from .routing import (
     bfs_distances, RoutingTables, TableDelta, build_tables, pack_port_masks,
@@ -31,6 +31,7 @@ TOPOLOGY_BUILDERS = {
     "dragonfly": dragonfly,
     "dragonfly_plus": dragonfly_plus,
     "rfc": rfc,
+    "jellyfish": jellyfish,
 }
 
 __all__ = [k for k in dir() if not k.startswith("_")]

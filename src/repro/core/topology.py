@@ -11,6 +11,7 @@ Builders:
   * :func:`dragonfly`    -- canonical balanced Dragonfly (Kim et al.)
   * :func:`dragonfly_plus`-- Dragonfly+ (leaf-spine groups, global trunking)
   * :func:`rfc`          -- 2-level Random Folded Clos (up/down connected MRLS)
+  * :func:`jellyfish`    -- random regular graph fabric (Singla et al.)
 """
 from __future__ import annotations
 
@@ -27,6 +28,7 @@ __all__ = [
     "dragonfly",
     "dragonfly_plus",
     "rfc",
+    "jellyfish",
 ]
 
 
@@ -460,4 +462,148 @@ def dragonfly_plus(
         level,
         meta={"g": g, "lpg": lpg, "spg": spg, "p": p,
               "global_per_spine": global_per_spine, "trunk": trunk},
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Jellyfish (random regular graph, Singla et al. — PAPERS.md)
+# ---------------------------------------------------------------------- #
+def _components(n: int, edges: np.ndarray) -> np.ndarray:
+    """Connected-component label per vertex (union-find over edges)."""
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:          # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    for a, b in edges:
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[rb] = ra
+    return np.asarray([find(i) for i in range(n)], np.int64)
+
+
+def jellyfish(
+    n_switches: int,
+    r: int,
+    d: int,
+    seed: int = 0,
+    repair_passes: int = 200,
+    name: Optional[str] = None,
+) -> Topology:
+    """Jellyfish random-regular-graph fabric (Singla et al.).
+
+    ``n_switches`` switches, each with ``r`` ports wired to other switches
+    and ``d`` endpoint ports (radix ``R = r + d``; every switch is a leaf,
+    like the direct-network Dragonfly).  Construction is the configuration
+    model — a seeded random perfect matching of the ``n*r`` port stubs —
+    followed by two deterministic repair stages:
+
+    * **simple-graph repair**: self-loops and parallel edges are broken by
+      double-edge swaps against randomly chosen partner edges (the swap
+      preserves every switch's degree);
+    * **connectivity repair**: while more than one component remains, an
+      edge inside the largest component and an edge inside another
+      component are cross-swapped, merging the components without
+      changing any degree.
+
+    The whole pipeline draws from one ``np.random.default_rng(seed)``
+    stream, so a (n_switches, r, d, seed) tuple names one exact graph.
+    """
+    if r < 2:
+        raise ValueError(f"jellyfish needs r >= 2 network ports, got {r}")
+    if r >= n_switches:
+        raise ValueError(
+            f"r = {r} must be < n_switches = {n_switches} (simple graph)")
+    if (n_switches * r) % 2:
+        raise ValueError(
+            f"n_switches * r = {n_switches * r} must be even (each link "
+            "consumes two port stubs)")
+    if d < 1:
+        raise ValueError(f"jellyfish needs d >= 1 endpoint ports, got {d}")
+    rng = np.random.default_rng(seed)
+
+    if r == n_switches - 1:
+        # the only simple r-regular graph on n vertices is K_n — the
+        # stub-matching repair cannot reach it, so build it directly
+        iu = np.triu_indices(n_switches, k=1)
+        edges = np.stack([iu[0], iu[1]], axis=1).astype(np.int64)
+        return _from_edges(
+            name or f"JF(R={r + d},S={n_switches * d},r={r})",
+            "direct", n_switches, edges, np.ones(n_switches, bool), d,
+            np.zeros(n_switches, np.int32), max_ports=r,
+            meta={"r": r, "d": d, "R": r + d, "n_switches": n_switches,
+                  "seed": seed})
+
+    stubs = np.repeat(np.arange(n_switches, dtype=np.int64), r)
+    rng.shuffle(stubs)
+    edges = stubs.reshape(-1, 2)                  # [n*r/2, 2]
+
+    # simple-graph repair: swap away self-loops and duplicate edges.
+    for _ in range(repair_passes):
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n_switches + hi
+        order = np.argsort(key, kind="stable")
+        sk = key[order]
+        bad = edges[:, 0] == edges[:, 1]          # self-loops
+        bad[order[1:][sk[1:] == sk[:-1]]] = True  # parallel edges
+        bad_idx = np.nonzero(bad)[0]
+        if bad_idx.size == 0:
+            break
+        # double-edge swap: (a,b),(c,e) -> (a,e),(c,b).  Partner edges are
+        # drawn at random; degrees are preserved unconditionally, and the
+        # next pass re-checks whatever the swap produced.
+        partners = rng.integers(0, edges.shape[0], size=bad_idx.size)
+        for i, j in zip(bad_idx, partners):
+            if i == j:
+                continue
+            edges[i, 1], edges[j, 1] = edges[j, 1], edges[i, 1]
+    else:
+        raise ValueError(
+            f"jellyfish(n={n_switches}, r={r}, seed={seed}) could not be "
+            f"repaired to a simple graph in {repair_passes} passes — the "
+            "configuration is too dense; raise n_switches or lower r")
+
+    # connectivity repair: cross-swap an in-component edge with an edge of
+    # the largest component until one component remains.
+    for _ in range(repair_passes):
+        comp = _components(n_switches, edges)
+        labels, counts = np.unique(comp, return_counts=True)
+        if labels.size == 1:
+            break
+        main = labels[np.argmax(counts)]
+        ec = comp[edges[:, 0]]                    # component of each edge
+        inside = np.nonzero(ec != main)[0]
+        anchor = np.nonzero(ec == main)[0]
+        # swap the second endpoints: (a,b) in minor, (c,e) in main ->
+        # (a,e),(c,b) bridges the two components, degrees unchanged.
+        i = int(inside[rng.integers(0, inside.size)])
+        j = int(anchor[rng.integers(0, anchor.size)])
+        # avoid manufacturing a self-loop or duplicate; re-draw next pass
+        if (edges[i, 0] == edges[j, 1] or edges[j, 0] == edges[i, 1]):
+            continue
+        edges[i, 1], edges[j, 1] = edges[j, 1], edges[i, 1]
+    else:
+        raise ValueError(
+            f"jellyfish(n={n_switches}, r={r}, seed={seed}) could not be "
+            f"connected in {repair_passes} swap passes")
+
+    is_leaf = np.ones(n_switches, bool)
+    level = np.zeros(n_switches, np.int32)
+    return _from_edges(
+        name or f"JF(R={r + d},S={n_switches * d},r={r})",
+        "direct",
+        n_switches,
+        edges,
+        is_leaf,
+        d,
+        level,
+        max_ports=r,
+        meta={"r": r, "d": d, "R": r + d, "n_switches": n_switches,
+              "seed": seed},
     )

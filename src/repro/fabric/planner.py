@@ -23,21 +23,84 @@ simulated L).
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
-from typing import Optional
+from pathlib import Path
+from typing import Mapping, Optional, Union
 
 from ..core import analytics, topology
 from ..core.routing import build_tables
 
-# pattern efficiency = achieved fraction of min(1, Θ) under the pattern,
-# calibrated with the CAMINOS-equivalent simulator (benchmarks/fig5/6/7;
-# see EXPERIMENTS.md §Repro).  all2all ~ uniform; allreduce (ring/halving
-# over nearby ranks) is locality-friendly, which favors FT.
-PATTERN_EFF = {
+# pattern efficiency = achieved fraction of min(1, Θ) under the pattern.
+# DEFAULT_PATTERN_EFF is the hand-estimated fallback (benchmarks/fig5/6/7;
+# see EXPERIMENTS.md §Repro); the *live* table below it is recalibrated
+# from the committed design-space-search artifact
+# (benchmarks/CALIB_pattern_eff.json, produced by
+# scripts/calibrate_planner.py from artifacts/PARETO_search.json) —
+# families/patterns the search did not measure keep the fallback value.
+# all2all ~ uniform; allreduce (ring/halving over nearby ranks) is
+# locality-friendly, which favors FT.
+DEFAULT_PATTERN_EFF = {
     "mrls": {"all2all": 0.85, "allreduce": 0.75, "uniform": 0.85},
     "fat_tree": {"all2all": 0.60, "allreduce": 0.90, "uniform": 0.90},
     "dragonfly": {"all2all": 0.45, "allreduce": 0.75, "uniform": 0.75},
 }
+
+CALIB_PATH = Path(__file__).resolve().parents[3] / "benchmarks" \
+    / "CALIB_pattern_eff.json"
+
+# workload patterns (repro.workloads vocabulary) -> planner traffic class
+_PATTERN_CLASS = {"uniform": "uniform", "all2all": "all2all",
+                  "allreduce": "allreduce"}
+
+
+def pattern_eff_from_search(records: Union[Mapping, list]) -> dict:
+    """Distill ``eff[family][pattern]`` from search artifact record(s).
+
+    ``records`` is a ``PARETO_search.json`` document: one search record,
+    ``{"searches": [...]}``, or a list of records.  For every fully
+    evaluated candidate, the achieved efficiency is measured throughput
+    over the analytic ceiling ``min(1, Θ)``; per (family, pattern) the
+    *best* candidate wins — the planner models the fabric one would
+    actually deploy, not the average draw.
+    """
+    if isinstance(records, Mapping):
+        records = records.get("searches", [records])
+    eff: dict = {}
+    for rec in records:
+        pattern = _PATTERN_CLASS.get(
+            rec.get("spec", {}).get("workload", {}).get("pattern"))
+        if pattern is None:
+            continue
+        for cand in rec.get("candidates", ()):
+            if cand.get("status") != "full":
+                continue
+            ceiling = min(1.0, cand["theta"])
+            if ceiling <= 0:
+                continue
+            e = min(1.0, cand["throughput"] / ceiling)
+            fam = eff.setdefault(cand["family"], {})
+            fam[pattern] = max(fam.get(pattern, 0.0), e)
+    return eff
+
+
+def load_pattern_eff(path: Union[None, str, Path] = None) -> dict:
+    """The live efficiency table: defaults overlaid with the committed
+    calibration artifact (missing/unreadable file -> pure defaults)."""
+    path = CALIB_PATH if path is None else Path(path)
+    table = {fam: dict(pats) for fam, pats in DEFAULT_PATTERN_EFF.items()}
+    try:
+        with open(path) as f:
+            calib = json.load(f)
+    except (OSError, ValueError):
+        return table
+    for fam, pats in calib.get("eff", {}).items():
+        for pattern, e in pats.items():
+            table.setdefault(fam, {})[pattern] = float(e)
+    return table
+
+
+PATTERN_EFF = load_pattern_eff()
 
 
 @dataclasses.dataclass

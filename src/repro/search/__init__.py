@@ -1,0 +1,25 @@
+"""Design-space search over (family, radix, f, policy, vcs).
+
+The paper's argument is a *design* argument — random multi-layer
+leaf-spine fabrics beat structured ones per unit link cost — so this
+package turns the repro into a searcher: a frozen :class:`SearchSpec`
+names the axes and protocol, :func:`search` samples/prunes/screens/
+promotes candidates through the normal batched ``run()`` path, and the
+Pareto layer emits the throughput-vs-cost frontier artifact
+(``artifacts/PARETO_search.json``).  Importing the package registers
+the ``python -m repro.api search`` subcommand.
+"""
+from .loop import search, search_many
+from .pareto import dominated_flags, frontier_ids
+from .space import (Candidate, DesignError, candidate_experiment,
+                    design_network, designer_families, register_designer)
+from .spec import OBJECTIVES, STRATEGIES, SearchSpec
+from . import cli as _cli  # noqa: F401  (subcommand registration)
+
+__all__ = [
+    "SearchSpec", "OBJECTIVES", "STRATEGIES",
+    "Candidate", "DesignError", "register_designer", "designer_families",
+    "design_network", "candidate_experiment",
+    "search", "search_many",
+    "dominated_flags", "frontier_ids",
+]

@@ -1,0 +1,84 @@
+"""``python -m repro.api search`` — the design-space search driver.
+
+Registered through the same declarative subcommand registry as the
+built-in drivers (:mod:`repro.api.cli`); importing :mod:`repro.search`
+is what makes the subcommand exist.  Spec files hold one search object
+or ``{"searches": [...]}``; ``--pareto-out`` writes the frontier
+artifact (default ``artifacts/PARETO_search.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from ..api import cli as _cli
+from .loop import search
+from .spec import SearchSpec
+
+__all__ = ["main_search", "write_pareto"]
+
+PARETO_OUT = os.path.join("artifacts", "PARETO_search.json")
+
+
+def write_pareto(records, path: str) -> None:
+    """Write search record(s) as the committed frontier artifact."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    doc = records[0] if len(records) == 1 else {"searches": records}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+
+def _summary(rec: dict) -> None:
+    c = rec["counts"]
+    print(f"{rec['name']}  strategy={rec['strategy']}  "
+          f"objective={rec['objective']}  candidates={rec['n_candidates']}"
+          f"/{rec['space_size']}  invalid={c['invalid']}  "
+          f"pruned={c['pruned']}  screened={c['screened']}  "
+          f"full={c['full']}")
+    by_id = {r["id"]: r for r in rec["candidates"]}
+    for cid in rec["frontier"]:
+        r = by_id[cid]
+        print(f"  * {r['label']:<40s} thr={r['throughput']:.3f}  "
+              f"C_l={r['cost_links']:.3f}  obj={r['objective']:.3f}")
+
+
+def main_search(args) -> int:
+    specs = [SearchSpec.from_dict(d)
+             for d in _cli.load_spec(args.spec, key="search",
+                                     plural="searches")]
+    if args.replicas is not None:
+        specs = [dataclasses.replace(s, replicas=args.replicas)
+                 for s in specs]
+    if args.seed is not None:
+        specs = [dataclasses.replace(s, seed=args.seed) for s in specs]
+    records = [search(s) for s in specs]
+    for rec in records:
+        _summary(rec)
+    if args.pareto_out:
+        write_pareto(records, args.pareto_out)
+        print(f"wrote Pareto artifact to {args.pareto_out}")
+    _cli.emit_records(records, args.out, "search record")
+    return 0
+
+
+def _search_flags(p) -> None:
+    p.add_argument("--pareto-out", default=PARETO_OUT, metavar="PATH",
+                   help="Pareto frontier artifact path (empty string "
+                        f"disables; default {PARETO_OUT})")
+
+
+_cli.register_subcommand(_cli.Subcommand(
+    name="search",
+    help="design-space search: optimize (family, radix, f, policy, vcs) "
+         "at fixed endpoints for throughput per link cost",
+    fn=main_search,
+    spec_help="path to the JSON search spec "
+              "(one object or {'searches': [...]})",
+    out="write full search records as JSON",
+    replicas=True, seed=True,
+    configure=_search_flags,
+))

@@ -52,8 +52,9 @@ def test_register_topology_roundtrip():
     topo = build_network(NetworkSpec("tiny_mrls_alias",
                                      {"n_leaves": 14, "u": 3, "d": 3}))
     assert topo.n_leaves == 14
+    register_topology("mrls", mrls)      # same builder: idempotent no-op
     with pytest.raises(ValueError, match="already registered"):
-        register_topology("mrls", mrls)
+        register_topology("mrls", lambda **kw: None)   # conflicting builder
 
 
 # ---------------------------------------------------------------------- #

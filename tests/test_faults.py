@@ -400,7 +400,9 @@ def test_degrade_sweep_retention_curve():
     base = Experiment(network=NET, route=DEGRADED,
                       workload=WorkloadSpec("uniform", load=0.5),
                       warm=30, measure=60, seed=0)
-    rec = degrade_sweep(base, [0.0, 0.10], fail_seed=4)
+    from repro.api import DegradeSpec
+    rec = degrade_sweep(DegradeSpec(base=base, rates=(0.0, 0.10),
+                                    fail_seed=4))
     assert rec["n_links"] == len(canonical_link_ids(build_network(NET)))
     assert [p["rate"] for p in rec["points"]] == [0.0, 0.10]
     assert rec["points"][0]["n_links_down"] == 0

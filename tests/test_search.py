@@ -1,0 +1,313 @@
+"""Design-space search: spec round-trips, pruning, halving, Pareto, CLI."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import DegradeSpec, degrade_sweep, register_topology
+from repro.api.cli import Subcommand, load_spec, register_subcommand
+from repro.api.memory import estimate_memory
+from repro.api.specs import Experiment, NetworkSpec, WorkloadSpec
+from repro.search import (Candidate, DesignError, SearchSpec, design_network,
+                          designer_families, dominated_flags, frontier_ids,
+                          register_designer, search)
+from repro.search.space import candidate_experiment
+
+
+# ---------------------------------------------------------------------- #
+# SearchSpec discipline
+# ---------------------------------------------------------------------- #
+def test_searchspec_roundtrip():
+    spec = SearchSpec(endpoints=64, radix=(8, 16), f=(1.0, 2.0),
+                      vcs=(2, 8), budget=4, mem_budget_mib=0.5,
+                      strategy="evolutionary", name="rt")
+    again = SearchSpec.from_dict(json.loads(spec.to_json()))
+    assert again == spec
+    assert hash(again) == hash(spec)
+
+
+def test_searchspec_casts_scalars_and_lists():
+    spec = SearchSpec(endpoints=64, families="mrls", radix=[8], f=2,
+                      vcs=[4])
+    assert spec.families == ("mrls",)
+    assert spec.radix == (8,)
+    assert spec.f == (2.0,)
+
+
+@pytest.mark.parametrize("kw", [
+    {"endpoints": 2},
+    {"endpoints": 64, "objective": "latency"},
+    {"endpoints": 64, "strategy": "anneal"},
+    {"endpoints": 64, "policies": ("shortest",)},
+    {"endpoints": 64, "budget": 0},
+    {"endpoints": 64, "survivors": 0.0},
+    {"endpoints": 64, "survivors": 1.5},
+    {"endpoints": 64, "screen_measure": 0},
+    {"endpoints": 64, "mem_budget_mib": -1},
+    {"endpoints": 64, "families": ()},
+])
+def test_searchspec_validation(kw):
+    with pytest.raises(ValueError):
+        SearchSpec(**kw)
+
+
+# ---------------------------------------------------------------------- #
+# designers
+# ---------------------------------------------------------------------- #
+def test_designers_cover_builtin_families():
+    assert {"mrls", "jellyfish", "fat_tree"} <= set(designer_families())
+
+
+def test_design_network_reaches_endpoint_floor():
+    for fam in ("mrls", "jellyfish", "fat_tree"):
+        net = design_network(Candidate(fam, 16, 1.0, "polarized", 4), 128)
+        from repro.api.registry import build_network
+        assert build_network(net).n_endpoints >= 128
+
+
+def test_design_infeasible_points_raise():
+    with pytest.raises(DesignError):            # odd fat-tree radix
+        design_network(Candidate("fat_tree", 15, 1.0, "polarized", 4), 64)
+    with pytest.raises(KeyError):               # unknown family
+        design_network(Candidate("torus", 16, 1.0, "polarized", 4), 64)
+
+
+def test_register_designer_idempotent_and_conflicting():
+    def designer(endpoints, radix, f, seed):
+        return {"radix": radix, "h": 1}
+    register_designer("_tmp_fam", designer)
+    register_designer("_tmp_fam", designer)     # same object: no-op
+    with pytest.raises(ValueError):
+        register_designer("_tmp_fam", lambda *a: {})
+    register_designer("_tmp_fam", lambda *a: {}, overwrite=True)
+
+
+def test_candidate_experiment_stages():
+    spec = SearchSpec(endpoints=64, screen_warm=5, screen_measure=10,
+                      warm=50, measure=100)
+    cand = Candidate("mrls", 16, 1.0, "minimal_adaptive", 2)
+    net = design_network(cand, 64)
+    scr = candidate_experiment(spec, cand, net, stage="screen")
+    full = candidate_experiment(spec, cand, net, stage="full")
+    assert (scr.warm, scr.measure) == (5, 10)
+    assert (full.warm, full.measure) == (50, 100)
+    assert scr.route.policy == "minimal_adaptive" and scr.route.vcs == 2
+    # same fabric + route key -> one compiled simulator for both stages
+    assert (scr.network, scr.route) == (full.network, full.route)
+
+
+# ---------------------------------------------------------------------- #
+# Pareto layer
+# ---------------------------------------------------------------------- #
+def test_pareto_dominance():
+    pts = [
+        {"throughput": 0.9, "cost_links": 2.0},   # dominated by 2
+        {"throughput": 0.5, "cost_links": 1.0},   # frontier (cheap)
+        {"throughput": 0.9, "cost_links": 1.5},   # frontier (fast)
+        {"throughput": 0.4, "cost_links": 1.0},   # dominated by 1
+    ]
+    assert dominated_flags(pts) == [True, False, False, True]
+    assert frontier_ids(pts) == [1, 2]            # sorted by cost
+
+
+def test_pareto_equal_points_not_mutually_dominating():
+    pts = [{"throughput": 0.5, "cost_links": 1.0}] * 2
+    assert dominated_flags(pts) == [False, False]
+
+
+# ---------------------------------------------------------------------- #
+# the search loop (tiny fabrics; slow-ish but deliberately small windows)
+# ---------------------------------------------------------------------- #
+TINY = dict(endpoints=32, families=("mrls", "jellyfish"), radix=(8,),
+            f=(1.0, 2.0), vcs=(2,), budget=3, survivors=0.5,
+            screen_warm=5, screen_measure=10, warm=10, measure=20, seed=2)
+
+
+def test_search_deterministic_and_structured():
+    rec1 = search(SearchSpec(**TINY))
+    rec2 = search(SearchSpec(**TINY))
+    assert json.dumps(rec1, sort_keys=True) == json.dumps(rec2,
+                                                          sort_keys=True)
+    assert rec1["n_candidates"] <= 3
+    full = [r for r in rec1["candidates"] if r["status"] == "full"]
+    assert full and rec1["frontier"]
+    for r in full:
+        assert {"throughput", "objective", "dominated",
+                "cost_links", "theta"} <= set(r)
+    assert rec1["counts"]["full"] == len(full)
+
+
+def test_search_prunes_on_mem_budget_without_compiling(monkeypatch):
+    # 1 KiB budget: every candidate must be pruned by the estimator; a
+    # compile attempt would crash via the poisoned simulator factory
+    import repro.api.runner as runner
+
+    def boom(*a, **kw):
+        raise AssertionError("pruned candidate reached the simulator")
+    monkeypatch.setattr(runner, "_make_simulator", boom)
+    rec = search(SearchSpec(**{**TINY, "mem_budget_mib": 0.001}))
+    assert rec["counts"]["pruned"] == rec["n_candidates"] > 0
+    assert rec["counts"]["screened"] == rec["counts"]["full"] == 0
+    assert rec["frontier"] == []
+    for r in rec["candidates"]:
+        assert r["status"] == "pruned" and "est_peak_bytes" in r
+
+
+def test_search_evolutionary_deterministic():
+    spec = SearchSpec(**{**TINY, "strategy": "evolutionary", "budget": 4})
+    rec1, rec2 = search(spec), search(spec)
+    assert json.dumps(rec1, sort_keys=True) == json.dumps(rec2,
+                                                          sort_keys=True)
+    assert rec1["strategy"] == "evolutionary"
+    assert rec1["counts"]["full"] >= 1
+
+
+def test_search_rejects_non_all2all_collectives():
+    with pytest.raises(ValueError, match="all2all"):
+        search(SearchSpec(**{**TINY},
+                          workload=WorkloadSpec("allreduce", ranks=8,
+                                                vec_packets=4)))
+
+
+def test_promotion_keeps_screen_frontier():
+    from repro.search.loop import _promote
+    spec = SearchSpec(endpoints=64, survivors=0.5)
+    mk = lambda i, thr, cost, obj: {          # noqa: E731
+        "id": i, "cost_links": cost,
+        "screen": {"throughput": thr, "objective": obj}}
+    screened = [
+        mk(0, 0.9, 2.0, 0.45),    # top objective
+        mk(1, 0.8, 2.0, 0.40),
+        mk(2, 0.1, 0.5, 0.20),    # cheap + slow: frontier, worst objective
+        mk(3, 0.0, 0.4, 0.00),    # failed run: never promoted
+    ]
+    promoted, demoted = _promote(spec, screened)
+    pids = {r["id"] for r in promoted}
+    # frontier = {0 (best), 2 (cheapest with nonzero thr)}; it fills the
+    # ceil(0.5*4)=2 quota, so objective runner-up 1 stays demoted and the
+    # failed run 3 is never promoted despite being cheapest overall
+    assert pids == {0, 2}
+    assert {r["id"] for r in demoted} == {1, 3}
+
+
+# ---------------------------------------------------------------------- #
+# CLI registry + spec loading
+# ---------------------------------------------------------------------- #
+def test_register_subcommand_idempotent_and_conflicting():
+    cmd = Subcommand(name="_tmp_cmd", help="x", fn=lambda a: 0)
+    register_subcommand(cmd)
+    register_subcommand(cmd)                     # equal spec: no-op
+    with pytest.raises(ValueError):
+        register_subcommand(Subcommand(name="_tmp_cmd", help="y",
+                                       fn=lambda a: 1))
+
+
+def test_search_subcommand_registered():
+    from repro.api.cli import registered_subcommands
+    names = list(registered_subcommands())
+    assert "search" in names
+    for expected in ("run", "sweep", "serve-sweep", "degrade", "estimate"):
+        assert expected in names
+
+
+def test_load_spec_plural_forms(tmp_path):
+    p = tmp_path / "s.json"
+    p.write_text(json.dumps({"searches": [{"a": 1}, {"a": 2}]}))
+    assert load_spec(str(p), key="search", plural="searches") == [
+        {"a": 1}, {"a": 2}]
+    p.write_text(json.dumps({"search": {"a": 1}}))
+    assert load_spec(str(p), key="search", plural="searches") == [{"a": 1}]
+    p.write_text(json.dumps({"a": 3}))
+    assert load_spec(str(p), key="search", plural="searches") == [{"a": 3}]
+
+
+# ---------------------------------------------------------------------- #
+# register_topology idempotence (satellite regression)
+# ---------------------------------------------------------------------- #
+def test_register_topology_idempotent_and_conflicting():
+    from repro.core.topology import fat_tree
+    register_topology("_tmp_topo", fat_tree)
+    register_topology("_tmp_topo", fat_tree)     # same builder: no-op
+    with pytest.raises(ValueError):
+        register_topology("_tmp_topo", lambda **kw: None)
+    register_topology("_tmp_topo", lambda **kw: None, overwrite=True)
+
+
+# ---------------------------------------------------------------------- #
+# degrade spec-first migration (satellite regression)
+# ---------------------------------------------------------------------- #
+def _tiny_base():
+    return Experiment(
+        network=NetworkSpec("mrls", {"n_leaves": 8, "u": 4, "d": 4,
+                                     "seed": 0}),
+        workload=WorkloadSpec("uniform", load=0.5),
+        warm=5, measure=10, name="deg")
+
+
+def test_degradespec_roundtrip():
+    spec = DegradeSpec(base=_tiny_base(), rates=(0.0, 0.05), fail_seed=3)
+    assert DegradeSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_degrade_sweep_legacy_signatures_warn():
+    base = _tiny_base()
+    spec = DegradeSpec(base=base, rates=(0.0,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rec = degrade_sweep(spec)                # spec-first: no warning
+    assert [p["rate"] for p in rec["points"]] == [0.0]
+    with pytest.warns(DeprecationWarning):
+        legacy = degrade_sweep(base, rates=(0.0,))
+    assert legacy["points"][0]["delivered"] == rec["points"][0]["delivered"]
+    with pytest.warns(DeprecationWarning):
+        from repro.api.degrade import degrade_sweep_from_dict
+        degrade_sweep_from_dict({"base": base.to_dict(), "rates": [0.0]})
+    with pytest.raises(TypeError):
+        degrade_sweep(spec, rates=(0.0, 0.1))    # spec + override: error
+
+
+# ---------------------------------------------------------------------- #
+# planner recalibration (satellite)
+# ---------------------------------------------------------------------- #
+def test_pattern_eff_from_search_picks_best_candidate():
+    from repro.fabric.planner import pattern_eff_from_search
+    rec = {
+        "spec": {"workload": {"pattern": "uniform"}},
+        "candidates": [
+            {"status": "full", "family": "mrls", "theta": 0.8,
+             "throughput": 0.6},
+            {"status": "full", "family": "mrls", "theta": 2.0,
+             "throughput": 0.9},
+            {"status": "pruned", "family": "mrls"},
+        ],
+    }
+    eff = pattern_eff_from_search(rec)
+    assert eff == {"mrls": {"uniform": 0.9}}     # 0.9/min(1,2) beats 0.75
+    wrapped = pattern_eff_from_search({"searches": [rec]})
+    assert wrapped == eff
+
+
+def test_load_pattern_eff_overlays_defaults(tmp_path):
+    from repro.fabric.planner import DEFAULT_PATTERN_EFF, load_pattern_eff
+    calib = tmp_path / "calib.json"
+    calib.write_text(json.dumps(
+        {"eff": {"mrls": {"all2all": 0.77}, "jellyfish": {"uniform": 0.5}}}))
+    table = load_pattern_eff(calib)
+    assert table["mrls"]["all2all"] == 0.77
+    assert table["mrls"]["allreduce"] == \
+        DEFAULT_PATTERN_EFF["mrls"]["allreduce"]
+    assert table["jellyfish"] == {"uniform": 0.5}
+    assert load_pattern_eff(tmp_path / "missing.json") == \
+        {f: dict(p) for f, p in DEFAULT_PATTERN_EFF.items()}
+
+
+def test_committed_calibration_artifact_loads():
+    from repro.fabric.planner import PATTERN_EFF
+    # whatever calibration is committed, the planner table must stay
+    # complete for its three modeled fabrics
+    for fam in ("mrls", "fat_tree", "dragonfly"):
+        for pattern in ("all2all", "allreduce", "uniform"):
+            assert 0.0 < PATTERN_EFF[fam][pattern] <= 1.0

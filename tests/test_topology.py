@@ -4,7 +4,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (mrls, oft, fat_tree, dragonfly, dragonfly_plus, rfc,
-                        exact_metrics, build_tables)
+                        jellyfish, exact_metrics, build_tables)
 
 
 def test_mrls_table2_11k():
@@ -101,3 +101,99 @@ def test_oft_property(q):
     assert (t.degrees[~t.is_leaf] == 2 * (q + 1)).all()
     tb = build_tables(t)
     assert tb.diameter_leaf == 2          # any two leaves share a spine
+
+
+# ---------------------------------------------------------------------- #
+# jellyfish (random regular graph)
+# ---------------------------------------------------------------------- #
+def test_jellyfish_basic_structure():
+    t = jellyfish(32, r=6, d=4, seed=0)
+    t.validate()
+    assert t.n_switches == 32
+    assert t.n_endpoints == 32 * 4
+    assert (t.degrees == 6).all()         # r-regular, every switch a leaf
+    assert t.is_leaf.all()
+    assert t.meta["R"] == 10
+
+
+def test_jellyfish_deterministic_and_seed_sensitive():
+    a = jellyfish(24, r=5, d=3, seed=7)
+    b = jellyfish(24, r=5, d=3, seed=7)
+    c = jellyfish(24, r=5, d=3, seed=8)
+    assert np.array_equal(a.nbrs, b.nbrs)
+    assert not np.array_equal(a.nbrs, c.nbrs)
+
+
+def test_jellyfish_complete_graph_case():
+    # r == n-1: only K_n is r-regular and simple; built directly
+    t = jellyfish(9, r=8, d=4, seed=0)
+    t.validate()
+    assert (t.degrees == 8).all()
+    tb = build_tables(t)
+    assert tb.diameter_leaf == 1
+
+
+def test_jellyfish_validation():
+    with pytest.raises(ValueError):
+        jellyfish(8, r=1, d=4)            # r < 2
+    with pytest.raises(ValueError):
+        jellyfish(8, r=8, d=4)            # r >= n
+    with pytest.raises(ValueError):
+        jellyfish(7, r=3, d=4)            # odd stub population
+    with pytest.raises(ValueError):
+        jellyfish(8, r=4, d=0)            # no endpoint ports
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 64), r=st.integers(3, 8), d=st.integers(1, 6),
+       seed=st.integers(0, 10))
+def test_jellyfish_structure_property(n, r, d, seed):
+    if r >= n or (n * r) % 2:
+        return
+    try:
+        t = jellyfish(n, r, d, seed=seed)
+    except ValueError:
+        return                            # too dense to repair: allowed
+    t.validate()                          # simple + reciprocal
+    assert (t.degrees == r).all()         # exact r-regularity
+    assert t.n_endpoints == n * d
+    tb = build_tables(t)
+    assert tb.diameter_leaf < np.iinfo(tb.dist_leaf.dtype).max
+    assert (tb.dist_leaf[np.eye(n, dtype=bool)] == 0).all()
+    # connected: every leaf reaches every leaf
+    assert (tb.dist_leaf < n).all()
+
+
+def test_jellyfish_estimate_memory_exact():
+    from repro.api import estimate_memory
+    from repro.api.registry import build_network
+    from repro.api.specs import NetworkSpec, RouteSpec
+    from repro.simulator.engine import Simulator, Traffic
+
+    net = NetworkSpec("jellyfish", {"n_switches": 16, "r": 4, "d": 2,
+                                    "seed": 3})
+    route = RouteSpec(policy="polarized", pool=4096)
+    est = estimate_memory(net, route)
+    tb = build_tables(build_network(net), masks="dense")
+    with Simulator(tb, route.to_sim_config()) as sim:
+        st_ = sim.make_state(Traffic("uniform", load=0.5), 0)
+        counted = ("qbuf", "qhead", "qlen", "oq_buf", "oq_head", "oq_len",
+                   "eq_buf", "eq_head", "eq_len", "fl_buf", "p_sd",
+                   "p_mid", "p_bh", "msg_rem", "msg_dst", "prog",
+                   "lat_hist")
+        actual = sum(np.asarray(st_[k]).nbytes for k in counted)
+    assert est["state_bytes_per_replica"] == actual
+
+
+def test_jellyfish_e2e_all2all():
+    from repro.api import Experiment, NetworkSpec, WorkloadSpec, run
+
+    exp = Experiment(
+        network=NetworkSpec("jellyfish", {"n_switches": 12, "r": 4,
+                                          "d": 2, "seed": 1}),
+        workload=WorkloadSpec("all2all", rounds=2),
+        name="jf_a2a", max_slots=4000)
+    res = run(exp)
+    assert res.metric == "completion"
+    assert res.completed
+    assert res.slots and res.slots > 0
